@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks: fused_train and qat_dense vs their pure-jnp
+oracles (interpret mode on CPU — relative numbers validate the paths; TPU
+wall time comes from the §Roofline projection)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mrf_net
+from repro.kernels.fused_train import ops as ft_ops, ref as ft_ref
+from repro.kernels.qat_dense import ops as qd_ops, ref as qd_ref
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    rows = []
+    sizes = mrf_net.layer_sizes(32)
+    params = mrf_net.init_params(jax.random.PRNGKey(0), sizes)
+    x = jax.random.normal(jax.random.PRNGKey(1), (512, sizes[0]))
+    y = jax.random.uniform(jax.random.PRNGKey(2), (512, 2))
+
+    t_k = _time(lambda: ft_ops.fused_train_step(params, x, y, lr=1e-3,
+                                                tile_batch=128))
+    t_r = _time(lambda: ft_ref.ref_train(params, x, y, lr=1e-3,
+                                         tile_batch=128))
+    rows.append(("kernel/fused_train", t_k * 1e6,
+                 f"oracle {t_r*1e6:.0f}us; interpret/oracle {t_k/t_r:.1f}x"))
+
+    xq = jax.random.randint(jax.random.PRNGKey(3), (256, 256), -128, 128, jnp.int8)
+    wq = jax.random.randint(jax.random.PRNGKey(4), (256, 256), -128, 128, jnp.int8)
+    bq = jnp.zeros((256,), jnp.int32)
+    s = jnp.full((256,), 1e-3, jnp.float32)
+    t_k = _time(lambda: qd_ops.qat_dense(xq, wq, bq, s))
+    t_r = _time(lambda: qd_ref.ref_qat_dense(xq, wq, bq, s))
+    rows.append(("kernel/qat_dense_int8", t_k * 1e6,
+                 f"oracle {t_r*1e6:.0f}us; bit-exact; MXU int8 target "
+                 f"394 TOPS (2x bf16)"))
+    return rows

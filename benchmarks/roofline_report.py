@@ -1,0 +1,38 @@
+"""§Roofline summary over the dry-run records (experiments/dryrun/*.json):
+per (arch x shape x mesh) — the three terms, dominant bottleneck, useful-
+FLOPs ratio.  The full table lives in EXPERIMENTS.md; this harness surfaces
+the single-pod baselines as benchmark rows."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load_records(label="baseline", mesh="single"):
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob(f"*_{mesh}_{label}.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def run():
+    rows = []
+    recs = load_records()
+    if not recs:
+        return [("roofline/missing", 0.0,
+                 "run PYTHONPATH=src python -m repro.launch.dryrun first")]
+    for r in recs:
+        rf = r["roofline"]
+        rows.append((f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                     f"dom={rf['dominant']} bound={rf['t_bound_s']:.3f}s "
+                     f"compute={rf['t_compute_s']:.3f}s "
+                     f"mem={rf['t_memory_s']:.3f}s "
+                     f"coll={rf['t_collective_s']:.3f}s "
+                     f"frac={rf['roofline_fraction']:.3f} "
+                     f"useful={rf['useful_flops_ratio'] or 0:.2f}"))
+    return rows

@@ -1,0 +1,44 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+#   table1_metrics   — paper Table 1 (original vs quantized error metrics)
+#   table_eq3_timing — paper Eq. 3 training-time model (FPGA/CPU/TPU)
+#   table_resources  — paper §3 FPGA resource estimates
+#   kernel_bench     — Pallas kernel micro-benchmarks vs oracles
+#   roofline_report  — §Roofline summary from the dry-run records
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,eq3,resources,kernels,roofline")
+    ap.add_argument("--steps", type=int, default=800,
+                    help="training steps for table1 (scaled schedule)")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (kernel_bench, roofline_report, table1_metrics,
+                            table_eq3_timing, table_resources)
+
+    suites = [
+        ("eq3", table_eq3_timing.run, {}),
+        ("resources", table_resources.run, {}),
+        ("kernels", kernel_bench.run, {}),
+        ("roofline", roofline_report.run, {}),
+        ("table1", table1_metrics.run, {"steps": args.steps}),
+    ]
+    print("name,us_per_call,derived")
+    for key, fn, kw in suites:
+        if want and key not in want:
+            continue
+        try:
+            for name, us, derived in fn(**kw):
+                print(f'{name},{us:.2f},"{derived}"', flush=True)
+        except Exception as e:  # keep the harness running
+            print(f'{key}/ERROR,0,"{type(e).__name__}: {e}"', flush=True)
+
+
+if __name__ == '__main__':
+    main()

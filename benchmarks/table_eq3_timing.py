@@ -1,0 +1,87 @@
+"""Paper Eq. (3): training-time model — FPGA (200 s for 250M samples) vs CPU
+(~16 h) vs this framework's TPU fused-kernel roofline projection.
+
+Also *measures* the software per-sample step cost on this container's CPU
+and the fused Pallas kernel (interpret mode, so a correctness-path timing,
+not TPU wall time) to validate the orders of magnitude the paper compares.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fpga_cost_model as fcm
+from repro.core import mrf_net
+from repro.data.epg import default_sequence
+from repro.data.pipeline import MRFSampleStream, sample_batch
+from repro.kernels.fused_train import ops as ft_ops
+from repro.optim import sgd
+
+N_PAPER = 250_000_000
+
+
+def run(measure_batch: int = 4096):
+    sizes = mrf_net.layer_sizes(32)
+    rows = []
+
+    # --- the paper's own arithmetic, reproduced exactly -------------------
+    eq3 = fcm.paper_eq3_seconds()
+    model = fcm.train_seconds(sizes, N_PAPER)
+    rows.append(("eq3/fpga_paper", 0.0,
+                 f"200s stated; eq3={eq3:.0f}s; our cycle model={model:.0f}s "
+                 f"(fwd {fcm.fwd_cycles(sizes)} + bwd {fcm.bwd_cycles(sizes)} cycles)"))
+
+    # --- measured CPU software step (jit'd SGD, this container) -----------
+    stream = MRFSampleStream(seq=default_sequence(32), batch_size=measure_batch)
+    x, y = sample_batch(stream, jax.random.PRNGKey(0))
+    params = mrf_net.init_params(jax.random.PRNGKey(1), sizes)
+    opt = sgd(1e-3)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, x, y):
+        loss, grads = jax.value_and_grad(mrf_net.mse_loss)(params, x, y)
+        return *opt.update(grads, opt_state, params), loss
+
+    step(params, opt_state, x, y)[2].block_until_ready()  # compile
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        params, opt_state, loss = step(params, opt_state, x, y)
+    loss.block_until_ready()
+    per_sample_cpu = (time.perf_counter() - t0) / (reps * measure_batch)
+    cpu_250m = per_sample_cpu * N_PAPER
+    rows.append(("eq3/cpu_measured", per_sample_cpu * 1e6,
+                 f"{cpu_250m:.0f}s for 250M on THIS cpu (jit'd JAX) vs paper "
+                 f"Keras-CPU 57600s — a tuned software baseline closes "
+                 f"{57600/cpu_250m:.0f}x of the paper's 250x; vs FPGA 200s: "
+                 f"{cpu_250m/eq3:.1f}x slower"))
+
+    # --- TPU roofline projection for the fused VMEM-resident kernel -------
+    tpu = fcm.tpu_train_seconds(sizes, N_PAPER, chips=1, int8=True)
+    rows.append(("eq3/tpu_fused_projection", 0.0,
+                 f"{tpu['t_total_s']:.2f}s for 250M on ONE v5e chip, priced "
+                 f"on the padded 128-lane layers the kernel executes "
+                 f"({tpu['bound']}-bound; compute {tpu['t_compute_s']:.2f}s, "
+                 f"stream {tpu['t_memory_s']:.2f}s) -> "
+                 f"{eq3/tpu['t_total_s']:.0f}x faster than the paper's FPGA"))
+
+    # --- measured fused kernel step (interpret mode) ----------------------
+    b = 1024
+    xk = jnp.zeros((b, sizes[0]), jnp.float32)
+    yk = jnp.zeros((b, 2), jnp.float32)
+    new, losses = ft_ops.fused_train_step(params, xk, yk, lr=1e-3,
+                                          tile_batch=256)
+    jax.block_until_ready(losses)
+    t0 = time.perf_counter()
+    new, losses = ft_ops.fused_train_step(params, xk, yk, lr=1e-3,
+                                          tile_batch=256)
+    jax.block_until_ready(losses)
+    per_call = time.perf_counter() - t0
+    rows.append(("eq3/fused_kernel_interpret", per_call / b * 1e6,
+                 "interpret-mode correctness path (TPU wall time is the "
+                 "roofline row above)"))
+    return rows

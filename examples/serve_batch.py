@@ -1,0 +1,24 @@
+"""Batched serving demo: prefill a wave of requests, then lockstep decode —
+the control flow the decode_32k / long_500k dry-run cells price at scale.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py [--arch mamba2-1.3b]
+(mamba2 demonstrates O(1)-state decode — the long_500k story.)
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-1.3b")
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--smoke",
+                "--requests", str(args.requests),
+                "--prompt-len", "48", "--gen-len", "24"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.analysis.roofline import (collective_bytes_from_hlo, roofline_terms,
+                                     TPU_V5E)

@@ -1,0 +1,282 @@
+"""Trip-count-aware cost model over compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE — a scanned
+layer stack (or q-chunk attention loop) is undercounted by its trip count.
+This module parses the optimized HLO and computes, bottom-up through
+fusions / to_apply / while bodies:
+
+    flops            2 * prod(out dims) * prod(contracting dims) per dot,
+                     multiplied through while trip counts
+    hbm_bytes        operand+output bytes of *top-level* ops only (fusion
+                     internals never touch HBM) — an HBM-traffic proxy far
+                     closer to a TPU than cost_analysis' "bytes accessed"
+    collective_bytes per-kind operand bytes of collectives, trip-multiplied
+
+Trip counts come from the while op's ``backend_config known_trip_count``
+(XLA annotates it), falling back to the condition's comparison constant.
+Shapes in post-partitioning HLO are per-device => all numbers per-device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "u1": 1, "s1": 1,
+}
+
+_RESULT_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*\(?\s*(pred|token|[a-z]+[0-9]+"
+    r"(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\]")
+_SHAPE_RE = re.compile(
+    r"\b(pred|token|[a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\]")
+_OPND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _prod(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    return _prod(dims) * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    flops_int8: float = 0.0  # subset of flops running on the int8 MXU path
+    hbm_bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    hbm_by_kind: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+
+    def add(self, other, k: float = 1.0, bytes_too: bool = True):
+        self.flops += other.flops * k
+        self.flops_int8 += other.flops_int8 * k
+        if bytes_too:
+            self.hbm_bytes += other.hbm_bytes * k
+            for key, v in other.hbm_by_kind.items():
+                self.hbm_by_kind[key] += v * k
+        for key, v in other.coll.items():
+            self.coll[key] += v * k
+
+
+def _split(hlo: str):
+    """-> (comps: name -> [op lines], shapes: name -> {op: (dtype, dims)})."""
+    comps: dict[str, list[str]] = {}
+    shapes: dict[str, dict[str, tuple]] = {}
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//") or s.startswith(("HloModule", "FileNames",
+                                                        "FunctionNames",
+                                                        "FileLocations",
+                                                        "StackFrames")):
+            continue
+        if cur is None:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+            if m and line.endswith("{") and "->" in line:
+                cur = m.group(1)
+                comps[cur] = []
+                shapes[cur] = {}
+            continue
+        if s == "}":
+            cur = None
+            continue
+        comps[cur].append(s)
+        rm = _RESULT_RE.match(s)
+        if rm:
+            shapes[cur][rm.group(1)] = (rm.group(2), rm.group(3))
+        # tuple-typed results: record first element shape only (good enough)
+    return comps, shapes
+
+
+def _operand_shapes(rhs: str, local: dict, n: int | None = None):
+    """Shapes of %ref operands inside the op's argument parens."""
+    if "(" not in rhs:
+        return []
+    call = rhs[rhs.index("("):]
+    # cut at parens close: operands live before attribute list
+    depth = 0
+    end = len(call)
+    for i, ch in enumerate(call):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    args = call[1:end]
+    out = []
+    for m in _OPND_RE.finditer(args):
+        nm = m.group(1)
+        if nm in local:
+            out.append(local[nm])
+        if n and len(out) >= n:
+            break
+    # also inline shapes (rare in optimized HLO but possible)
+    if not out:
+        out = [(dt, dims) for dt, dims in _SHAPE_RE.findall(args)]
+    return out
+
+
+def _op_kind(rhs: str) -> str:
+    """The HLO opcode: first token after the result type (which may be a
+    tuple like ``(s32[], /*index=5*/f32[8,8]{1,0})``)."""
+    m = re.match(r"^(?:\([^()]*\)|\S+)\s+([\w\-]+)\(", rhs)
+    return m.group(1) if m else ""
+
+
+_NO_HBM = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+           "bitcast-convert", "after-all", "partition-id", "replica-id",
+           "iota", "broadcast", "while", "conditional", "call"}
+
+# --- effective HBM traffic per op (TPU fusion-aware proxy) -----------------
+# Pure elementwise ops fuse into producers/consumers under XLA-TPU => 0.
+# Data-movement ops touch only the moved region (a fused dynamic-slice reads
+# the slice, not its operand buffer; a DUS writes the update region, not the
+# accumulator).  Dots/reduces stream their operands.  Documented proxy —
+# see EXPERIMENTS.md §Roofline methodology.
+
+_STREAM_OPS = {"dot", "convolution", "reduce", "reduce-window",
+               "select-and-scatter", "custom-call", "cholesky",
+               "triangular-solve", "all-gather", "all-reduce",
+               "reduce-scatter", "all-to-all", "collective-permute",
+               "all-gather-start", "all-reduce-start", "send", "recv"}
+_MOVE2X_OPS = {"slice", "copy", "copy-start", "transpose", "reverse",
+               "concatenate", "pad", "gather", "scatter", "sort",
+               "rng", "rng-bit-generator"}
+
+
+def _op_traffic(kind: str, line: str, rhs: str, local: dict) -> float:
+    rm = _RESULT_RE.match(line)
+    out_b = _nbytes(rm.group(2), rm.group(3)) if rm else 0.0
+    if kind in _STREAM_OPS:
+        return out_b + sum(_nbytes(dt, d) for dt, d in _operand_shapes(rhs, local))
+    if kind in _MOVE2X_OPS:
+        return 2.0 * out_b
+    if kind == "dynamic-slice":
+        return out_b  # reads just the slice (fused), writes fuse onward
+    if kind == "dynamic-update-slice":
+        ops = _operand_shapes(rhs, local)
+        upd = _nbytes(*ops[1]) if len(ops) > 1 else out_b
+        return 2.0 * upd  # read update + write region; accumulator aliased
+    return 0.0  # elementwise & friends: fused on TPU
+
+
+def analyze_hlo(hlo: str) -> dict:
+    comps, shapes = _split(hlo)
+    memo: dict[str, Cost] = {}
+    warnings: list[str] = []
+
+    def cost_of(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        memo[name] = Cost()  # cycle guard
+        local = shapes.get(name, {})
+        total = Cost()
+        for line in comps.get(name, ()):
+            if " = " not in line:
+                continue
+            lhs, rhs = line.split(" = ", 1)
+            kind = _op_kind(rhs)
+            c = Cost()
+            # ---- flops
+            if kind in ("dot", "convolution"):
+                rm = _RESULT_RE.match(line)
+                out_elems = _prod(rm.group(3)) if rm else 0
+                opnds = _operand_shapes(rhs, local, n=2)
+                contract = 1
+                m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+                if m and opnds:
+                    ldims = opnds[0][1].split(",") if opnds[0][1] else []
+                    for ci in m.group(1).split(","):
+                        if ci and int(ci) < len(ldims):
+                            contract *= int(ldims[int(ci)])
+                elif kind == "convolution" and len(opnds) == 2:
+                    contract = max(_prod(opnds[1][1]) // max(out_elems, 1), 1)
+                f = 2.0 * out_elems * contract
+                c.flops += f
+                if opnds and opnds[0][0] in ("s8", "u8", "s4", "u4"):
+                    c.flops_int8 += f  # int8 MXU path (2x bf16 rate)
+            # ---- collectives
+            base_kind = kind.replace("-start", "").replace("-done", "")
+            if base_kind in COLLECTIVES and not kind.endswith("-done"):
+                opnds = _operand_shapes(rhs, local)
+                c.coll[base_kind] += sum(_nbytes(dt, d) for dt, d in opnds)
+            # ---- hbm bytes: per-op effective traffic (TPU fusion proxy)
+            if kind not in _NO_HBM and kind != "fusion":
+                t = _op_traffic(kind, line, rhs, local)
+                if t:
+                    c.hbm_bytes += t
+                    c.hbm_by_kind[kind] += t
+            # ---- control flow / called computations
+            if kind == "while":
+                body = re.search(r"body=%?([\w\.\-]+)", rhs)
+                cond = re.search(r"condition=%?([\w\.\-]+)", rhs)
+                trip = 1
+                tm = _TRIP_RE.search(rhs)
+                if tm:
+                    trip = int(tm.group(1))
+                elif cond and cond.group(1) in comps:
+                    consts = [int(x) for ln in comps[cond.group(1)]
+                              for x in re.findall(r"constant\((\d+)\)", ln)]
+                    trip = max(consts) if consts else 1
+                    warnings.append(f"while {lhs.strip()}: trip from cond={trip}")
+                if body:
+                    c.add(cost_of(body.group(1)), k=trip, bytes_too=True)
+            elif kind == "fusion":
+                # flops + effective traffic of the ops inside the fusion
+                m = re.search(r"calls=%?([\w\.\-]+)", rhs)
+                if m:
+                    c.add(cost_of(m.group(1)), bytes_too=True)
+            elif kind == "conditional":
+                for m in re.finditer(r"branch_computations=\{([^}]*)\}", rhs):
+                    names = [x.strip().lstrip("%") for x in m.group(1).split(",")]
+                    if names:  # count the most expensive branch
+                        branch_costs = [cost_of(n) for n in names]
+                        c.add(max(branch_costs, key=lambda b: b.flops))
+            elif kind in ("call", "async-start"):
+                m = re.search(r"(?:to_apply|calls)=%?([\w\.\-]+)", rhs)
+                if m:
+                    c.add(cost_of(m.group(1)))
+            # reduce/map/sort to_apply bodies: elementwise, negligible flops
+            total.add(c)
+        memo[name] = total
+        return total
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda k: len(comps[k]))
+    c = cost_of(entry)
+    return {
+        "flops": c.flops,
+        "flops_int8": c.flops_int8,
+        "hbm_bytes": c.hbm_bytes,
+        "hbm_by_kind": dict(sorted(c.hbm_by_kind.items(),
+                                   key=lambda kv: -kv[1])),
+        "collectives": {**dict(c.coll), "total": sum(c.coll.values())},
+        "entry": entry,
+        "n_computations": len(comps),
+        "warnings": warnings[:5],
+    }

@@ -1,0 +1,191 @@
+"""Model/run configuration schema for the architecture zoo.
+
+One ``ModelConfig`` fully determines an architecture; ``src/repro/configs/<id>.py``
+holds the exact assigned configs plus a reduced ``smoke()`` variant per arch.
+``ShapeCell`` describes the assigned input-shape cells (train_4k / prefill_32k /
+decode_32k / long_500k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int            # query heads; 0 for attention-free (mamba2)
+    n_kv_heads: int
+    d_ff: int               # per-expert FFN width for MoE; 0 for attention-free
+    vocab_size: int
+    d_head: int = 0         # 0 -> d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0      # routed experts
+    n_shared_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM (mamba2 / hybrid) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    # --- hybrid / attention flavour ---
+    swa_window: int = 0       # 0 = full attention
+    global_layer_every: int = 0  # hybrid: every k-th layer uses full attention
+    # --- encoder-decoder ---
+    n_enc_layers: int = 0     # 0 = decoder-only
+    # --- multimodal stub frontend ---
+    n_prefix_embeds: int = 0  # precomputed patch/frame embeddings (vlm/audio)
+    # --- misc ---
+    qkv_bias: bool = False
+    gated_mlp: bool = True    # SwiGLU (llama-family); False -> GELU MLP
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    # --- the paper's technique knob ---
+    quant: str = "none"       # "none" | "qat-int8" (fake-quant, semantic QAT)
+                              # | "int8-hlo" (true int8 fwd dots + STE bwd —
+                              #   the deployment form, visible in the HLO)
+    # --- §Perf levers ---
+    parallel_block: bool = False  # PaLM-style attn ∥ mlp: 1 TP all-reduce/layer
+    remat: str = "full"           # "full" | "save_attn" (keep attention
+                                  # outputs; skip re-running attention in bwd)
+    decode_unroll: bool = False   # python-loop decode layers with per-layer
+                                  # donated caches (kills scan ds/DUS/copy
+                                  # cache traffic — §Perf cross-cutting)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def head_dim(self) -> int:
+        if self.d_head:
+            return self.d_head
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k decode (bounded per-token state)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def d_inner(self) -> int:  # SSM inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_state else 0
+
+    # --- TP head padding (DESIGN.md §5): heads -> multiple of tp ---------- #
+    def padded_heads(self, tp: int) -> tuple[int, int]:
+        """(q_heads, kv_heads) padded so both divide ``tp``.
+
+        KV heads are group-replicated up to ``tp`` when needed (vLLM-style);
+        query heads are zero-padded up to a multiple of ``tp``.  With tp=1
+        this is the exact architecture.
+        """
+        if self.n_heads == 0:
+            return (0, 0)
+        hq = math.ceil(self.n_heads / tp) * tp
+        if self.n_kv_heads % tp == 0 and hq % self.n_kv_heads == 0 and self.n_heads % tp == 0:
+            return (self.n_heads, self.n_kv_heads)
+        hkv = tp if tp > 1 else self.n_kv_heads
+        while hq % hkv:  # ensure grouping divides
+            hq += tp
+        return (hq, hkv)
+
+    def padded_vocab(self, tp: int) -> int:
+        return math.ceil(self.vocab_size / tp) * tp
+
+    def validate(self):
+        if self.n_heads:
+            assert self.head_dim * self.n_heads >= self.d_model or self.d_head, self.name
+        if self.family == "moe":
+            assert self.n_experts > 0 and self.top_k > 0, self.name
+        if self.family in ("ssm", "hybrid"):
+            assert self.ssm_state > 0, self.name
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+TRAIN_4K = ShapeCell("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeCell("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeCell("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeCell("long_500k", 524_288, 1, "decode")
+ALL_CELLS = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def cells_for(cfg: ModelConfig) -> list[ShapeCell]:
+    """Assigned cells actually runnable for this arch (skips documented in
+    DESIGN.md §4: long_500k only for sub-quadratic archs)."""
+    out = []
+    for c in ALL_CELLS:
+        if c.name == "long_500k" and not cfg.sub_quadratic:
+            continue
+        out.append(c)
+    return out
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Analytic parameter count (exact for our implementation, tp=1)."""
+    d, L = cfg.d_model, cfg.n_layers
+    total = cfg.vocab_size * d * 2  # embed + head (untied)
+    per_layer = 2 * d  # two RMSNorm gains
+
+    def attn_params():
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        p = d * hq * dh + 2 * d * hkv * dh + hq * dh * d
+        if cfg.qkv_bias:
+            p += (hq + 2 * hkv) * dh
+        return p
+
+    def ffn_params(ff):
+        return d * ff * (3 if cfg.gated_mlp else 2)
+
+    def ssm_params():
+        di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+        # in_proj: x, z, B, C, dt ; out_proj ; A, D, dt_bias, norm
+        return d * (2 * di + 2 * ns + nh) + di * d + 3 * nh + di
+
+    if cfg.family == "dense" or cfg.family == "vlm":
+        per_layer += attn_params() + ffn_params(cfg.d_ff)
+    elif cfg.family == "moe":
+        per_layer += attn_params() + d * cfg.n_experts  # router
+        per_layer += cfg.n_experts * ffn_params(cfg.d_ff)
+        per_layer += cfg.n_shared_experts * ffn_params(cfg.d_ff)
+    elif cfg.family == "ssm":
+        per_layer = 2 * d + ssm_params()
+    elif cfg.family == "hybrid":
+        per_layer += attn_params() + ssm_params() + ffn_params(cfg.d_ff)
+    elif cfg.family == "encdec":
+        # decoder layer: self-attn + cross-attn + ffn; encoder layer: attn + ffn
+        dec = attn_params() * 2 + ffn_params(cfg.d_ff) + 3 * d
+        enc = attn_params() + ffn_params(cfg.d_ff) + 2 * d
+        return cfg.vocab_size * d * 2 + L * dec + cfg.n_enc_layers * enc + 2 * d
+    total += L * per_layer + d  # final norm
+    return total
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top_k + shared experts only)."""
+    if cfg.family != "moe":
+        return param_count(cfg)
+    d = cfg.d_model
+    ffn = d * cfg.d_ff * (3 if cfg.gated_mlp else 2)
+    inactive = (cfg.n_experts - cfg.top_k) * ffn
+    return param_count(cfg) - cfg.n_layers * inactive

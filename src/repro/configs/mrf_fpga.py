@@ -1,0 +1,8 @@
+"""The paper's own model: the FPGA-adapted MRF reconstruction MLP
+(see repro.core.mrf_net).  Not part of the LM zoo; exposed here so the
+launcher can --arch mrf-fpga for the end-to-end MRF example."""
+from repro.core import mrf_net
+
+N_FRAMES = 32
+SIZES = mrf_net.layer_sizes(N_FRAMES, mrf_net.ADAPTED_HIDDEN)
+ORIGINAL_SIZES = mrf_net.layer_sizes(N_FRAMES, mrf_net.ORIGINAL_HIDDEN)

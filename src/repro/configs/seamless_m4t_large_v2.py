@@ -1,0 +1,15 @@
+"""seamless-m4t-large-v2 — enc-dec 24L+24L d_model=1024 16H (kv=16) d_ff=8192
+vocab=256206, multimodal.  Backbone only: the speech frontend is a stub —
+input_specs provides precomputed frame embeddings (S_enc = seq/4).
+[arXiv:2308.11596; hf]"""
+from repro.configs.base import ModelConfig
+from repro.configs.smoke import smoke_of
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="encdec",
+    n_layers=24, n_enc_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=8192, vocab_size=256206, d_head=64,
+).validate()
+
+def smoke():
+    return smoke_of(CONFIG)

@@ -1,0 +1,9 @@
+# The paper's primary contribution — on-accelerator quantized NN training for
+# MRF map reconstruction — implemented as a TPU-native JAX system:
+#   mrf_net          the Barbieri original + FPGA-adapted MLPs
+#   qat              quantization-aware training + full-integer export/oracle
+#   train_loop       software reference training (Adam / SGD, MSE)
+#   fpga_cost_model  the paper's cycle/resource model (Eq. 3) + TPU roofline
+#   metrics          Table 1 metrics (MAPE / MPE / RMSE)
+# The fused on-chip training step itself is kernels/fused_train.
+from repro.core import fpga_cost_model, metrics, mrf_net, qat

@@ -1,0 +1,161 @@
+"""Cycle-accurate cost model of the paper's FPGA training design, plus the
+TPU-roofline equivalent for the same workload.
+
+Paper facts modelled (Results §3):
+* one generic node block: 16 nodes semi-parallel, 4 cycles per block step;
+  forward across all layers of the adapted net = 56 cycles;
+* one backprop block (16x32 weight tile), 3 cycles per step; full backward
+  pass = 104 cycles;
+* f_clk = 200 MHz (250 MHz feasible), 250M training samples
+  -> Eq. (3): 5ns * 250e6 * (56 + 104) = 200 s;
+* resources: NN+backprop 145k LUT / 5k DSP / 146k FF (8% LUT, 40% DSP of the
+  ALVEO U250); PCIe adds 83k LUT / 148k FF / 150 BRAM;
+* CPU baseline: ~16 h on a Ryzen 9 3900 -> the paper's "up to 250x" claim.
+
+The model is parametric in the layer widths so it also prices *our*
+reconstructed nets and arbitrary MLPs; it reports both the paper-stated cycle
+counts and the model-derived counts (see DESIGN.md §3 on width reconstruction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+# ---------------------------------------------------------------------------
+# FPGA side
+# ---------------------------------------------------------------------------
+
+ALVEO_U250 = {"LUT": 1_728_000, "FF": 3_456_000, "DSP": 12_288, "BRAM": 2_688}
+
+PAPER = {
+    "fwd_cycles": 56,
+    "bwd_cycles": 104,
+    "cycles_per_sample": 160,
+    "clock_hz": 200e6,
+    "n_train_samples": 250_000_000,
+    "train_seconds": 200.0,
+    "cpu_train_seconds": 16 * 3600.0,  # ~16 h on Ryzen 9 3900
+    "resources_nn": {"LUT": 145_000, "DSP": 5_000, "FF": 146_000},
+    "resources_pcie": {"LUT": 83_000, "FF": 148_000, "BRAM": 150},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FPGADesign:
+    clock_hz: float = 200e6
+    node_block: int = 16          # nodes computed in parallel
+    fwd_cycles_per_block: int = 4
+    bwd_tile: tuple = (32, 16)    # backprop weight tile (in, out)
+    bwd_cycles_per_tile: int = 3  # weight/bias update sweep (paper: "3 clock cycles")
+    delta_cycles_per_tile: int = 2  # delta back-propagation sweep (pipelined)
+
+
+def fwd_cycles(widths: Sequence[int], d: FPGADesign = FPGADesign()) -> int:
+    """Forward cycles: the node block is time-multiplexed over every layer's
+    output nodes.  widths = (in, h1, ..., out)."""
+    outs = widths[1:]
+    return d.fwd_cycles_per_block * sum(math.ceil(n / d.node_block) for n in outs)
+
+
+def bwd_cycles(widths: Sequence[int], d: FPGADesign = FPGADesign()) -> int:
+    """Backward cycles (Eq. 2): two sweeps of the 16x32 block per transition —
+    a weight/bias-update sweep (3 cycles/tile, the paper's "single
+    backpropagation module requires 3 clock cycles") and a delta-propagation
+    sweep (2 cycles/tile; not needed into the input layer).  On the adapted
+    net this evaluates to 3*24 + 2*16 = 104, the paper's stated count.
+    """
+    ti, to = d.bwd_tile
+    upd_tiles, delta_tiles = 0, 0
+    for i, (n_in, n_out) in enumerate(zip(widths[:-1], widths[1:])):
+        tiles = math.ceil(n_in / ti) * math.ceil(n_out / to)
+        upd_tiles += tiles
+        if i > 0:  # no delta propagated into the input layer
+            delta_tiles += tiles
+    return d.bwd_cycles_per_tile * upd_tiles + d.delta_cycles_per_tile * delta_tiles
+
+
+def train_seconds(widths: Sequence[int], n_samples: int,
+                  d: FPGADesign = FPGADesign()) -> float:
+    """Eq. (3) generalised: period * samples * (fwd + bwd) cycles."""
+    c = fwd_cycles(widths, d) + bwd_cycles(widths, d)
+    return (1.0 / d.clock_hz) * n_samples * c
+
+
+def paper_eq3_seconds() -> float:
+    """The paper's own arithmetic, exactly."""
+    return (1.0 / PAPER["clock_hz"]) * PAPER["n_train_samples"] * PAPER["cycles_per_sample"]
+
+
+def resource_estimate(widths: Sequence[int], d: FPGADesign = FPGADesign()) -> dict:
+    """Analytic resource model calibrated to the paper's totals.
+
+    The paper prices a fixed design (16-node block + one backprop block +
+    weight/bias storage), so resources are dominated by the *blocks*, not the
+    layer count; we model: per-node MAC unit ~ (310 LUT, 19 DSP eq.) from the
+    paper's 145k LUT / 5k DSP for 16 nodes + bp block, storage in FF.
+    """
+    params = sum(i * o + o for i, o in zip(widths[:-1], widths[1:]))
+    node_lut, node_dsp = 4_200, 170        # per node-unit incl. control
+    bp_lut_per_lane, bp_dsp_per_lane = 2_400, 70
+    lanes = d.bwd_tile[1]
+    lut = d.node_block * node_lut + lanes * bp_lut_per_lane + 12_000  # +control
+    dsp = d.node_block * node_dsp + lanes * bp_dsp_per_lane
+    ff = params * 8 + 25_000  # int8 weights in FF/LUTRAM + pipeline regs
+    return {
+        "LUT": lut, "DSP": dsp, "FF": ff,
+        "LUT_frac": lut / ALVEO_U250["LUT"],
+        "DSP_frac": dsp / ALVEO_U250["DSP"],
+        "params": params,
+    }
+
+
+# ---------------------------------------------------------------------------
+# TPU side — the roofline equivalent of the same training workload
+# ---------------------------------------------------------------------------
+
+TPU_V5E = {
+    "peak_bf16_flops": 197e12,
+    "peak_int8_ops": 394e12,
+    "hbm_gbps": 819e9,
+    "ici_gbps_per_link": 50e9,
+    "vmem_bytes": 128 * 1024 * 1024,
+}
+
+
+def mlp_train_flops_per_sample(widths: Sequence[int]) -> int:
+    """fwd (2*MACs) + bwd (~2x fwd: dX and dW matmuls) + update (O(params))."""
+    macs = sum(i * o for i, o in zip(widths[:-1], widths[1:]))
+    return 2 * macs * 3
+
+
+def tpu_train_seconds(widths: Sequence[int], n_samples: int,
+                      chips: int = 1, int8: bool = True,
+                      batch_stream_bytes_per_sample: int | None = None,
+                      padded_lanes: int = 128) -> dict:
+    """Roofline estimate for the fused VMEM-resident training kernel.
+
+    compute term: total train FLOPs / peak — priced on the *padded* 128-lane
+    layers the kernel actually executes (MXU tile granularity), not the
+    logical widths, so this is a realistic target rather than a fantasy;
+    memory term: the only HBM traffic is streaming the samples in (weights
+    stay in VMEM) — exactly the paper's 'weights resident on chip, samples
+    stream through' regime.
+    """
+    n_in = widths[0]
+    if batch_stream_bytes_per_sample is None:
+        # int8 features + fp32 targets
+        batch_stream_bytes_per_sample = n_in * (1 if int8 else 4) + 2 * 4
+    padded = [max(w, padded_lanes) for w in widths]  # kernel pads to 128 lanes
+    flops = mlp_train_flops_per_sample(padded) * n_samples
+    peak = TPU_V5E["peak_int8_ops"] if int8 else TPU_V5E["peak_bf16_flops"]
+    t_compute = flops / (chips * peak)
+    t_memory = batch_stream_bytes_per_sample * n_samples / (chips * TPU_V5E["hbm_gbps"])
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_total_s": max(t_compute, t_memory),
+        "bound": "memory" if t_memory > t_compute else "compute",
+        "flops": flops,
+    }

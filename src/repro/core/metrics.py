@@ -1,0 +1,33 @@
+"""Error metrics from the paper's Table 1: MAPE, MPE, RMSE on T1/T2 (ms)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mape(pred, true):
+    """Mean absolute percentage error (%)."""
+    return 100.0 * jnp.mean(jnp.abs(pred - true) / jnp.maximum(jnp.abs(true), 1e-9))
+
+
+def mpe(pred, true):
+    """Mean (signed) percentage error (%) — the paper's bias metric."""
+    return 100.0 * jnp.mean((pred - true) / jnp.maximum(jnp.abs(true), 1e-9))
+
+
+def rmse(pred, true):
+    """Root mean squared error, in the units of the inputs (ms for T1/T2)."""
+    return jnp.sqrt(jnp.mean(jnp.square(pred - true)))
+
+
+def table1_metrics(pred_ms, true_ms) -> dict:
+    """pred/true: (N, 2) arrays of (T1, T2) in milliseconds."""
+    out = {}
+    for j, name in enumerate(("T1", "T2")):
+        p, t = pred_ms[:, j], true_ms[:, j]
+        out[name] = {
+            "MAPE_%": float(mape(p, t)),
+            "MPE_%": float(mpe(p, t)),
+            "RMSE_ms": float(rmse(p, t)),
+        }
+    return out

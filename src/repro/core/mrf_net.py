@@ -1,0 +1,77 @@
+"""The Barbieri-et-al MRF reconstruction MLP and the paper's FPGA-adapted variant.
+
+Original net: nine fully connected layers, ReLU on hidden layers, linear output
+producing (T1, T2).  Adapted net: the first two hidden layers removed so the
+whole network + backprop fits the ALVEO U250 resource budget.
+
+Exact widths appear only in the paper's figures (not the text); we reconstruct
+widths consistent with the paper's cycle arithmetic (see DESIGN.md §3):
+forward cycles = 4 * sum_l ceil(n_l / 16) = 56 for the adapted net.
+
+Params are a simple list of {"w": (in, out), "b": (out,)} dicts — a pytree that
+flows through jax.grad, our optimizers, the QAT wrappers, and the Pallas fused
+training kernel identically.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+# Hidden widths (output layer of 2 appended automatically).
+# Adapted: sum(ceil(n/16) for n in (64,64,32,16,16,16,2)) = 4+4+2+1+1+1+1 = 14
+#          -> 14 * 4 = 56 forward cycles, matching the paper.
+ADAPTED_HIDDEN = (64, 64, 32, 16, 16, 16)
+# Original = two extra layers in front ("the first two layers were removed").
+ORIGINAL_HIDDEN = (128, 128) + ADAPTED_HIDDEN
+N_OUTPUTS = 2  # (T1, T2), normalised
+
+
+def layer_sizes(n_frames: int, hidden: Sequence[int] = ADAPTED_HIDDEN) -> tuple:
+    """Full (in, hidden..., out) size tuple. Input = [Re | Im] of the signal."""
+    return (2 * n_frames, *hidden, N_OUTPUTS)
+
+
+def init_params(key: jax.Array, sizes: Sequence[int], dtype=jnp.float32):
+    """He-uniform init, biases zero (matches Keras Dense defaults closely)."""
+    params = []
+    for i, (n_in, n_out) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, sub = jax.random.split(key)
+        bound = jnp.sqrt(6.0 / n_in)
+        w = jax.random.uniform(sub, (n_in, n_out), dtype, minval=-bound, maxval=bound)
+        params.append({"w": w, "b": jnp.zeros((n_out,), dtype)})
+    return params
+
+
+def forward(params, x: jnp.ndarray, *, return_hidden: bool = False):
+    """ReLU MLP forward. x: (..., 2*n_frames) -> (..., 2)."""
+    hidden = []
+    h = x
+    for i, layer in enumerate(params):
+        z = h @ layer["w"] + layer["b"]
+        last = i == len(params) - 1
+        h = z if last else jax.nn.relu(z)
+        if return_hidden:
+            hidden.append(h)
+    return (h, hidden) if return_hidden else h
+
+
+def mse_loss(params, x, y, forward_fn=forward):
+    pred = forward_fn(params, x)
+    return jnp.mean(jnp.square(pred - y))
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+def node(x, w, b, activation=jax.nn.relu):
+    """Eq. (1) of the paper: y = sigma(sum_i x_i w_i + b) for a single node.
+
+    Kept as an explicit function because the paper's FPGA correctness check is
+    defined at node granularity (identical inputs/weights/bias on FPGA vs
+    Python); our kernel tests mirror that check.
+    """
+    return activation(jnp.dot(x, w) + b)

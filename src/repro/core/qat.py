@@ -1,0 +1,145 @@
+"""Quantization-Aware Training (Jacob et al. 2017) for the MRF net — and, as a
+first-class framework feature, for any dense projection in the model zoo.
+
+Scheme (matches the paper's 'full integer' network):
+* symmetric int8, zero-point 0 everywhere (ReLU nets lose nothing from
+  symmetric quantization and it keeps the FPGA/TPU integer path MAC-only);
+* weights quantized per-output-channel from their live absmax;
+* activations quantized per-tensor with an EMA-calibrated absmax (the QAT
+  "observer"), carried functionally as ``QATState``;
+* straight-through estimator for gradients;
+* full-integer export: int8 weights, int32 biases (scale = s_x * s_w), fp32
+  requantization multipliers (TPU-idiomatic: scales live in fp32 registers;
+  the accumulator and all tensor data are integers).
+
+The integer forward pass here is the *oracle* that the Pallas int8 kernel
+(kernels/qat_dense) must match bit-exactly — mirroring the paper's
+FPGA-vs-Python exactness check.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+@dataclasses.dataclass(frozen=True)
+class QATConfig:
+    bits: int = 8
+    ema: float = 0.99
+    per_channel_weights: bool = True
+
+    @property
+    def qmax(self) -> float:
+        return float(2 ** (self.bits - 1) - 1)
+
+
+def _round_ste(x):
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def fake_quant(x, scale, qmax=INT8_MAX):
+    """Symmetric fake-quant with STE. ``scale`` broadcasts against x."""
+    s = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(_round_ste(x / s), -qmax - 1, qmax)
+    return q * s
+
+
+def weight_scale(w, cfg: QATConfig):
+    if cfg.per_channel_weights:
+        return jnp.max(jnp.abs(w), axis=0, keepdims=True) / cfg.qmax  # (1, out)
+    return jnp.max(jnp.abs(w)) / cfg.qmax
+
+
+# ---------------------------------------------------------------------------
+# QAT state (activation observers) and quantized forward for the MRF MLP.
+# ---------------------------------------------------------------------------
+
+def init_qat_state(n_layers: int):
+    """One activation absmax observer per layer input."""
+    return {"act_absmax": jnp.ones((n_layers,), jnp.float32)}
+
+
+def forward_qat(params, qstate, x, cfg: QATConfig = QATConfig(), *, train: bool = True):
+    """Fake-quantized MLP forward.
+
+    Returns (output, new_qstate).  In eval (train=False) the observers freeze.
+    The output layer is linear and left un-fake-quantized on its output
+    (the paper's head emits real-valued T1/T2; only its weights/inputs are
+    integer).
+    """
+    absmax = qstate["act_absmax"]
+    new_absmax = []
+    h = x
+    for i, layer in enumerate(params):
+        cur = jnp.max(jnp.abs(h)) + 1e-12
+        obs = jnp.where(train, cfg.ema * absmax[i] + (1.0 - cfg.ema) * cur, absmax[i])
+        new_absmax.append(obs)
+        a_scale = jax.lax.stop_gradient(obs) / cfg.qmax
+        hq = fake_quant(h, a_scale, cfg.qmax)
+        wq = fake_quant(layer["w"], weight_scale(layer["w"], cfg), cfg.qmax)
+        z = hq @ wq + layer["b"]
+        h = z if i == len(params) - 1 else jax.nn.relu(z)
+    return h, {"act_absmax": jnp.stack(new_absmax)}
+
+
+# ---------------------------------------------------------------------------
+# Full-integer export + integer oracle (bit-exactness target for the kernel).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class IntLayer:
+    w_q: jnp.ndarray          # int8  (in, out)
+    b_q: jnp.ndarray          # int32 (out,)   scale = s_x * s_w
+    s_in: jnp.ndarray         # fp32 scalar — input activation scale
+    s_w: jnp.ndarray          # fp32 (out,)  — per-channel weight scale
+    s_out: jnp.ndarray | None # fp32 scalar — output act scale (None = float head)
+
+
+def export_int8(params, qstate, cfg: QATConfig = QATConfig()) -> list:
+    """Freeze a QAT-trained net into full-integer layers."""
+    layers = []
+    absmax = qstate["act_absmax"]
+    for i, layer in enumerate(params):
+        s_in = absmax[i] / cfg.qmax
+        s_w = jnp.squeeze(weight_scale(layer["w"], cfg), axis=0)  # (out,)
+        w_q = jnp.clip(jnp.round(layer["w"] / jnp.maximum(s_w, 1e-12)), -128, 127).astype(jnp.int8)
+        b_q = jnp.round(layer["b"] / jnp.maximum(s_in * s_w, 1e-12)).astype(jnp.int32)
+        last = i == len(params) - 1
+        s_out = None if last else absmax[i + 1] / cfg.qmax
+        layers.append(IntLayer(w_q=w_q, b_q=b_q, s_in=jnp.float32(s_in),
+                               s_w=s_w.astype(jnp.float32),
+                               s_out=None if last else jnp.float32(s_out)))
+    return layers
+
+
+def quantize_input(x, s_in) -> jnp.ndarray:
+    return jnp.clip(jnp.round(x / s_in), -128, 127).astype(jnp.int8)
+
+
+def int_dense(x_q, layer: IntLayer):
+    """One integer layer: int8 x int8 -> int32 accum -> fp32 requant -> int8.
+
+    This exact sequence (int32 accumulate, fp32 rescale, round-to-nearest-even
+    via jnp.round, clip) is what the Pallas kernel must reproduce bit-for-bit.
+    """
+    acc = jnp.dot(x_q.astype(jnp.int32), layer.w_q.astype(jnp.int32)) + layer.b_q
+    if layer.s_out is None:  # linear float head
+        return acc.astype(jnp.float32) * (layer.s_in * layer.s_w)
+    requant = (layer.s_in * layer.s_w) / layer.s_out
+    y = jnp.round(acc.astype(jnp.float32) * requant)
+    y = jnp.clip(y, 0, 127)  # ReLU fused into the clamp (zero-point 0)
+    return y.astype(jnp.int8)
+
+
+def int_forward(int_layers: Sequence[IntLayer], x: jnp.ndarray) -> jnp.ndarray:
+    """Full-integer inference from float features (quantize once at entry)."""
+    h = quantize_input(x, int_layers[0].s_in)
+    for layer in int_layers:
+        h = int_dense(h, layer)
+    return h  # float (batch, 2) from the head

@@ -1,0 +1,102 @@
+"""Training loops for the MRF net: the float baseline (Adam, the paper's
+software setup) and the QAT loop (fake-quant, Adam), plus the evaluation the
+paper runs (5000 held-out synthetic signals -> Table 1 metrics).
+
+The *fused on-accelerator* training path (the paper's actual contribution)
+lives in kernels/fused_train and is exercised by examples/mrf_fpga_train.py;
+this module is the software reference those paths are validated against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mrf_net, qat
+from repro.core.metrics import table1_metrics
+from repro.data.pipeline import MRFSampleStream, T1_RANGE_MS, T2_RANGE_MS, make_eval_set, sample_batch
+from repro.optim import adam, sgd
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    n_frames: int = 32
+    hidden: tuple = mrf_net.ADAPTED_HIDDEN
+    lr: float = 1e-4            # paper's learning rate
+    batch_size: int = 256
+    steps: int = 500
+    qat: bool = False
+    optimizer: str = "adam"     # paper: Adam for software, SGD on FPGA
+    seed: int = 0
+    log_every: int = 100
+
+
+def make_train_step(cfg: TrainConfig, opt):
+    if cfg.qat:
+        def loss_fn(params, qstate, x, y):
+            pred, new_qstate = qat.forward_qat(params, qstate, x, train=True)
+            return jnp.mean(jnp.square(pred - y)), new_qstate
+
+        @jax.jit
+        def step(params, qstate, opt_state, x, y):
+            (loss, new_qstate), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, qstate, x, y)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, new_qstate, opt_state, loss
+        return step
+
+    def loss_fn(params, x, y):
+        return mrf_net.mse_loss(params, x, y)
+
+    @jax.jit
+    def step(params, qstate, opt_state, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, qstate, opt_state, loss
+    return step
+
+
+def train(cfg: TrainConfig, stream: MRFSampleStream | None = None, verbose: bool = True):
+    """Train an MRF net; returns (params, qstate, history)."""
+    from repro.data.epg import default_sequence
+
+    if stream is None:
+        stream = MRFSampleStream(seq=default_sequence(cfg.n_frames), batch_size=cfg.batch_size)
+    sizes = mrf_net.layer_sizes(stream.seq.n_frames, cfg.hidden)
+    key = jax.random.PRNGKey(cfg.seed)
+    key, k_init = jax.random.split(key)
+    params = mrf_net.init_params(k_init, sizes)
+    qstate = qat.init_qat_state(len(params))
+    opt = adam(cfg.lr) if cfg.optimizer == "adam" else sgd(cfg.lr)
+    opt_state = opt.init(params)
+    step_fn = make_train_step(cfg, opt)
+
+    history = []
+    t0 = time.perf_counter()
+    for i in range(cfg.steps):
+        x, y = sample_batch(stream, jax.random.fold_in(key, i))
+        params, qstate, opt_state, loss = step_fn(params, qstate, opt_state, x, y)
+        if i % cfg.log_every == 0 or i == cfg.steps - 1:
+            history.append((i, float(loss)))
+            if verbose:
+                print(f"step {i:5d}  loss {float(loss):.6f}")
+    wall = time.perf_counter() - t0
+    return params, qstate, {"history": history, "wall_seconds": wall, "sizes": sizes}
+
+
+def evaluate(params, seq, *, qstate=None, int_layers=None, n: int = 5000, seed: int = 123):
+    """The paper's test: n held-out synthetic signals -> Table 1 metrics (ms)."""
+    x, y = make_eval_set(seq, n=n, seed=seed)
+    if int_layers is not None:
+        pred = qat.int_forward(int_layers, x)
+    elif qstate is not None:
+        pred, _ = qat.forward_qat(params, qstate, x, train=False)
+    else:
+        pred = mrf_net.forward(params, x)
+    scale = jnp.array([T1_RANGE_MS[1], T2_RANGE_MS[1]])
+    return table1_metrics(jnp.asarray(pred) * scale, jnp.asarray(y) * scale)

@@ -1,0 +1,2 @@
+from repro.data.epg import MRFSequence, simulate_fingerprints, default_sequence
+from repro.data.pipeline import MRFSampleStream, make_batch_iterator

@@ -1,0 +1,3 @@
+from repro.ft.checkpoint import CheckpointManager, restore_state, save_state
+from repro.ft.straggler import StragglerMonitor
+from repro.ft.elastic import reshard_tree

@@ -1,0 +1,35 @@
+"""Elastic scaling: re-shard a training state onto a different mesh.
+
+Checkpoints are global-indexed (ft/checkpoint.py), so scaling down/up between
+job restarts is just restore-with-new-shardings.  For *in-job* elasticity
+(donating a live state to a new mesh after evicting a straggler host),
+``reshard_tree`` re-places every leaf with ``jax.device_put`` under the new
+rules — GSPMD moves the bytes.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.dist.sharding import AxisRules, param_shardings
+
+
+def reshard_tree(tree, axes_tree, new_rules: AxisRules):
+    """Re-place a pytree of arrays onto the mesh/rules in ``new_rules``.
+
+    axes_tree: logical-axes pytree matching ``tree`` (same one used to build
+    the original shardings) — the mapping is mesh-independent, which is what
+    makes the state portable across mesh shapes.
+    """
+    shardings = param_shardings(axes_tree, new_rules)
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def downsize_batch_rules(rules: AxisRules, lost_hosts: int,
+                         hosts_per_data_shard: int = 1) -> AxisRules:
+    """Policy helper: after evicting hosts, shrink the data axis (keep model
+    axis intact — TP degree is baked into padded head counts)."""
+    # The new mesh must be constructed by the caller from surviving devices;
+    # this helper only documents/validates the policy choice.
+    del lost_hosts, hosts_per_data_shard
+    return rules

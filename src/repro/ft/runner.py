@@ -1,0 +1,84 @@
+"""Fault-tolerant training loop: periodic async checkpoints, resume-from-
+latest, straggler watchdog, and crash-retry — the loop a real multi-pod job
+runs under a cluster scheduler.
+
+Fault injection (``inject_fault_at``) lets tests exercise the recovery path
+deterministically on CPU: the loop "crashes" at a chosen step, then the
+restart resumes from the latest checkpoint and must reach the same final
+state as an uninterrupted run (tests/test_fault_tolerance.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator
+
+import jax
+
+from repro.ft.checkpoint import CheckpointManager
+from repro.ft.straggler import StragglerMonitor
+
+
+class InjectedFault(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    total_steps: int
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    max_restarts: int = 3
+    inject_fault_at: int | None = None
+
+
+def run(train_step: Callable, init_state, batches: Iterator,
+        cfg: RunnerConfig, *, shardings=None, on_metrics=None):
+    """Run to cfg.total_steps with checkpoint/restart. Returns final state.
+
+    ``batches`` must be a *seekable* factory: callable(step) -> batch, so a
+    restart replays the data stream deterministically from the resume step.
+    """
+    mgr = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep, every=cfg.ckpt_every)
+    monitor = StragglerMonitor()
+    restarts = 0
+    faults_remaining = 1 if cfg.inject_fault_at is not None else 0
+
+    # step-0 checkpoint: the train step donates its state buffers, so a crash
+    # before the first periodic checkpoint must restore from step 0 rather
+    # than reuse (already-donated) init_state.
+    from repro.ft.checkpoint import latest_step, save_state
+    if latest_step(cfg.ckpt_dir) is None:
+        save_state(init_state, cfg.ckpt_dir, 0, async_io=False)
+
+    while True:
+        restored, start = mgr.restore_latest(init_state, shardings)
+        state = restored if restored is not None else init_state
+        step = start
+        try:
+            while step < cfg.total_steps:
+                batch = batches(step)
+                t0 = time.perf_counter()
+                if faults_remaining and step == cfg.inject_fault_at:
+                    faults_remaining -= 1
+                    raise InjectedFault(f"injected at step {step}")
+                state, metrics = train_step(state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                action = monitor.update(dt)
+                if action == "checkpoint_and_evict":
+                    mgr.maybe_save(state, step + 1)  # snapshot before evict
+                step += 1
+                mgr.maybe_save(state, step)
+                if on_metrics:
+                    on_metrics(step, metrics, dt)
+            mgr.wait()
+            return state, step
+        except InjectedFault:
+            restarts += 1
+            if restarts > cfg.max_restarts:
+                raise
+            mgr.wait()  # flush any pending async save, then "restart"
+            continue

@@ -1,0 +1,53 @@
+"""Straggler detection & mitigation policy.
+
+At 1000+ nodes, slow hosts (thermal throttling, failing HBM, network
+degradation) stretch every synchronous step.  The monitor keeps an EWMA of
+step times; a step slower than ``threshold x`` the EWMA increments a strike
+counter, and ``strikes`` consecutive slow steps trigger a mitigation action:
+
+    "checkpoint_and_evict" — snapshot via CheckpointManager, remove the slow
+    host from the next job restart (elastic re-mesh handles the smaller
+    device count — see ft/elastic.py).
+
+On this CPU container the monitor is exercised by tests with synthetic
+timings; on a real cluster the per-host step times come from the
+coordination service heartbeats.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    threshold: float = 1.8     # step slower than 1.8x EWMA is "slow"
+    strikes: int = 3           # consecutive slow steps before mitigation
+    ema: float = 0.9
+    warmup: int = 5            # ignore the first steps (compile, cache warm)
+
+    _mean: float = 0.0
+    _count: int = 0
+    _strikes: int = 0
+
+    def update(self, step_seconds: float, host: int = 0) -> str | None:
+        """Feed one step time. Returns a mitigation action or None."""
+        self._count += 1
+        if self._count <= self.warmup:
+            self._mean = step_seconds if self._mean == 0.0 else (
+                0.5 * self._mean + 0.5 * step_seconds)
+            return None
+        slow = step_seconds > self.threshold * self._mean
+        if slow:
+            self._strikes += 1
+        else:
+            self._strikes = 0
+            self._mean = self.ema * self._mean + (1 - self.ema) * step_seconds
+        if self._strikes >= self.strikes:
+            self._strikes = 0
+            return "checkpoint_and_evict"
+        return None
+
+    @property
+    def mean_step_seconds(self) -> float:
+        return self._mean

@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   fused_train  — whole-net fused training step (the paper's contribution)
+#   qat_dense    — int8 quantized dense layer (full-integer inference path)
+# Each package: kernel.py (pallas_call + BlockSpec), ops.py (public jit'd
+# wrapper), ref.py (pure-jnp oracle used by the allclose/bit-exact tests).

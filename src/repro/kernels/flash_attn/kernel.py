@@ -1,0 +1,113 @@
+"""Flash attention (fwd) in Pallas with causal block skip + SWA band skip.
+
+Why this kernel exists (EXPERIMENTS §Roofline): the XLA attention path
+materialises (q_chunk x S) f32 score slabs in HBM — the dominant memory-term
+producer for every prefill_32k cell — and computes the full causal rectangle
+(2x FLOP waste, visible as MODEL_FLOPS/HLO ~ 0.5).  The fused kernel keeps
+the online-softmax state (m, l, acc) in VMEM across the kv-block grid axis
+and *skips* kv blocks that are fully masked:
+
+    causal:  kv_block > q_block           -> skipped (halves causal FLOPs)
+    window:  kv_block band outside W      -> skipped (SWA cost ~ S*(W+Bq))
+
+Grid: (batch*q_heads, n_q_blocks, n_kv_blocks), kv innermost — the standard
+TPU revisiting-accumulator pattern.  GQA: k/v BlockSpecs index kv heads via
+``bh // group`` so no head replication is materialised.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, block_q: int,
+            block_k: int, n_k: int, seq_len: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = iq * block_q
+    k_lo = ik * block_k
+    run = True
+    if causal:
+        run = k_lo <= q_lo + block_q - 1          # any unmasked pair
+    if window:
+        run = jnp.logical_and(run, k_lo + block_k - 1 > q_lo - window)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0]                              # (Bq, dh)
+        k = k_ref[0]                              # (Bk, dh)
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        keep = k_pos < seq_len
+        if causal:
+            keep &= k_pos <= q_pos
+        if window:
+            keep &= k_pos > q_pos - window
+        s = jnp.where(keep, s, NEG_INF)
+        m_prev = m_scr[...]                       # (Bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                    # (Bq, Bk)
+        corr = jnp.exp(m_prev - m_new)            # (Bq, 1)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _out():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "group", "kv_len",
+                                             "interpret"))
+def flash_attention_call(q, k, v, *, causal: bool = True, window: int = 0,
+                         block_q: int = 128, block_k: int = 128,
+                         group: int = 1, kv_len: int | None = None,
+                         interpret: bool = True):
+    """q: (BH, Sq, dh); k/v: (BH//group, Sk, dh), seqs padded to block
+    multiples; kv_len = true (unpadded) kv length.  Returns (BH, Sq, dh)."""
+    bh, sq, dh = q.shape
+    sk = k.shape[1]
+    n_q, n_k = sq // block_q, sk // block_k
+    kern = functools.partial(_kernel, scale=1.0 / math.sqrt(dh),
+                             causal=causal, window=window, block_q=block_q,
+                             block_k=block_k, n_k=n_k,
+                             seq_len=kv_len if kv_len is not None else sk)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,33 @@
+"""Public wrapper: (B, S, H, dh) GQA layout -> kernel layout, with seq
+padding to block multiples and head grouping handled here."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention_call
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q: (B, Sq, Hq, dh); k/v: (B, Sk, Hkv, dh) -> (B, Sq, Hq, dh)."""
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    block_q = min(block_q, max(sq, 8))
+    block_k = min(block_k, max(sk, 8))
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    # (B, S, H, dh) -> (B*H, S, dh), kv heads shared per group via index_map
+    qf = qp.transpose(0, 2, 1, 3).reshape(b * hq, sq + pq, dh)
+    kf = kp.transpose(0, 2, 1, 3).reshape(b * hkv, sk + pk, dh)
+    vf = vp.transpose(0, 2, 1, 3).reshape(b * hkv, sk + pk, dh)
+    out = flash_attention_call(qf, kf, vf, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k, group=g,
+                               kv_len=sk, interpret=interpret)
+    out = out.reshape(b, hq, sq + pq, dh).transpose(0, 2, 1, 3)
+    return out[:, :sq]

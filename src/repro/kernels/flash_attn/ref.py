@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel: naive full-softmax GQA
+attention with causal / sliding-window masks."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, Sq, Hq, dh); k/v: (B, Sk, Hkv, dh) -> (B, Sq, Hq, dh)."""
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / math.sqrt(dh)
+    qpos, kpos = jnp.arange(sq), jnp.arange(sk)
+    keep = jnp.ones((sq, sk), bool)
+    if causal:
+        keep &= kpos[None] <= qpos[:, None]
+    if window:
+        keep &= kpos[None] > qpos[:, None] - window
+    s = jnp.where(keep[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,145 @@
+"""The paper's contribution as a TPU kernel: a whole-network fused training
+step (forward + backprop + SGD update) in a single ``pl.pallas_call``.
+
+FPGA -> TPU mapping (DESIGN.md §2):
+
+* ALVEO: weights live in BRAM/FF for the entire run; samples stream through a
+  16-node block time-multiplexed over layers.
+* Here: all layer weights live in **VMEM scratch for the entire grid** —
+  loaded from HBM once (grid step 0), updated in-place every batch tile, and
+  written back to HBM once (last grid step).  The grid streams batch tiles,
+  so per-step HBM traffic is *samples only*, exactly the paper's regime.
+* The "16-node semi-parallel block" becomes a 128-lane MXU tile: every layer
+  is zero-padded to PAD=128 so each layer's matmul is one aligned MXU op.
+  Zero padding is self-preserving through fwd+bwd (zero rows/cols stay zero;
+  see tests), so no masking is needed except at the loss.
+
+Grid semantics: TPU grids execute sequentially on a core, which makes the
+read-modify-write of the scratch weights across grid steps sound (the same
+property the classic Pallas matmul accumulator uses).
+
+Two update modes:
+* ``tile_batch = 1``  -> per-sample streaming SGD, the *faithful* FPGA
+  algorithm (one update per training signal);
+* ``tile_batch = T``  -> minibatch-SGD per tile, the MXU-native reformulation
+  (beyond-paper optimization; see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+PAD = 128  # MXU lane width; every layer is padded to this many nodes.
+
+
+def _kernel(x_ref, y_ref, w_in_ref, b_in_ref,            # inputs
+            w_out_ref, b_out_ref, loss_ref,               # outputs
+            w_s, b_s, h_s,                                # scratch
+            *, n_layers: int, out_dim: int, lr: float, n_tiles: int,
+            qat: bool):
+    i = pl.program_id(0)
+
+    # --- load weights into VMEM scratch once -------------------------------
+    @pl.when(i == 0)
+    def _init():
+        w_s[...] = w_in_ref[...]
+        b_s[...] = b_in_ref[...]
+
+    x = x_ref[...]           # (T, PAD) fp32, feature-padded with zeros
+    y = y_ref[...]           # (T, PAD) fp32, target-padded with zeros
+    tb = x.shape[0]
+
+    def maybe_fq(w):
+        if not qat:
+            return w
+        # symmetric per-channel int8 fake-quant of the live weights (QAT fwd)
+        s = jnp.max(jnp.abs(w), axis=0, keepdims=True) / 127.0 + 1e-12
+        return jnp.clip(jnp.round(w / s), -127, 127) * s
+
+    # --- forward ------------------------------------------------------------
+    h = x
+    for l in range(n_layers):
+        w_l = maybe_fq(w_s[l])
+        z = jnp.dot(h, w_l, preferred_element_type=jnp.float32) + b_s[l][None, :]
+        h = z if l == n_layers - 1 else jnp.maximum(z, 0.0)
+        if l < n_layers - 1:
+            h_s[l] = h  # post-activation, reused as both input and relu-mask in bwd
+
+    # --- loss (MSE over the first out_dim lanes) -----------------------------
+    lane = jax.lax.broadcasted_iota(jnp.int32, (tb, PAD), 1)
+    mask = (lane < out_dim).astype(jnp.float32)
+    diff = (h - y) * mask
+    denom = jnp.float32(tb * out_dim)
+    loss_ref[0, 0] = jnp.sum(diff * diff) / denom
+
+    # --- backward + in-scratch SGD update (Eq. 2 of the paper) ---------------
+    dz = 2.0 * diff / denom
+    for l in range(n_layers - 1, -1, -1):
+        h_prev = x if l == 0 else h_s[l - 1]
+        # propagate delta *before* updating this layer's weights
+        if l > 0:
+            w_l = maybe_fq(w_s[l])
+            dh = jnp.dot(dz, w_l.T, preferred_element_type=jnp.float32)
+            relu_mask = (h_prev > 0.0).astype(jnp.float32)
+        dw = jnp.dot(h_prev.T, dz, preferred_element_type=jnp.float32)
+        db = jnp.sum(dz, axis=0)
+        w_s[l] = w_s[l] - lr * dw
+        b_s[l] = b_s[l] - lr * db
+        if l > 0:
+            dz = dh * relu_mask
+
+    # --- flush updated weights to HBM once ----------------------------------
+    @pl.when(i == n_tiles - 1)
+    def _flush():
+        w_out_ref[...] = w_s[...]
+        b_out_ref[...] = b_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_layers", "out_dim", "lr",
+                                             "tile_batch", "qat", "interpret"))
+def fused_train_call(x_pad, y_pad, w_pad, b_pad, *, n_layers: int, out_dim: int,
+                     lr: float, tile_batch: int, qat: bool = False,
+                     interpret: bool = True):
+    """Run one fused pass over the whole (padded) batch.
+
+    x_pad: (B, PAD) fp32; y_pad: (B, PAD) fp32; w_pad: (L, PAD, PAD);
+    b_pad: (L, PAD).  B must be a multiple of tile_batch.
+    Returns (w_new, b_new, per_tile_losses (B//tile_batch,)).
+    """
+    batch, _ = x_pad.shape
+    assert batch % tile_batch == 0, (batch, tile_batch)
+    n_tiles = batch // tile_batch
+    kern = functools.partial(_kernel, n_layers=n_layers, out_dim=out_dim,
+                             lr=lr, n_tiles=n_tiles, qat=qat)
+    w_new, b_new, losses = pl.pallas_call(
+        kern,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile_batch, PAD), lambda i: (i, 0)),   # x tile
+            pl.BlockSpec((tile_batch, PAD), lambda i: (i, 0)),   # y tile
+            pl.BlockSpec((n_layers, PAD, PAD), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_layers, PAD), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_layers, PAD, PAD), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_layers, PAD), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_layers, PAD, PAD), jnp.float32),
+            jax.ShapeDtypeStruct((n_layers, PAD), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_layers, PAD, PAD), jnp.float32),       # weights
+            pltpu.VMEM((n_layers, PAD), jnp.float32),            # biases
+            pltpu.VMEM((max(n_layers - 1, 1), tile_batch, PAD), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x_pad, y_pad, w_pad, b_pad)
+    return w_new, b_new, losses[:, 0]

@@ -1,0 +1,56 @@
+"""Public wrapper for the fused training kernel: pads the MRF net's ragged
+layer list to the kernel's uniform (L, 128, 128) layout, runs the kernel, and
+unpads back to the param pytree.
+
+The zero padding is *self-preserving*: padded weight rows/cols and biases are
+zero, padded activations stay exactly 0 through ReLU, and every padded
+gradient entry is a product with one of those zeros — so the unpadded result
+equals the unpadded math (asserted against ref.py in the tests).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_train.kernel import PAD, fused_train_call
+
+
+def pad_params(params):
+    """Ragged [{'w','b'}] -> ((L,PAD,PAD), (L,PAD)) zero-padded stacks."""
+    n_layers = len(params)
+    w = jnp.zeros((n_layers, PAD, PAD), jnp.float32)
+    b = jnp.zeros((n_layers, PAD), jnp.float32)
+    for l, layer in enumerate(params):
+        i, o = layer["w"].shape
+        assert i <= PAD and o <= PAD, f"layer {l} ({i}x{o}) exceeds PAD={PAD}"
+        w = w.at[l, :i, :o].set(layer["w"].astype(jnp.float32))
+        b = b.at[l, :o].set(layer["b"].astype(jnp.float32))
+    return w, b
+
+
+def unpad_params(w_pad, b_pad, like):
+    out = []
+    for l, layer in enumerate(like):
+        i, o = layer["w"].shape
+        out.append({"w": w_pad[l, :i, :o], "b": b_pad[l, :o]})
+    return out
+
+
+def fused_train_step(params, x, y, *, lr: float, tile_batch: int = 128,
+                     qat: bool = False, interpret: bool = True):
+    """One fused pass over batch (B, D_in)/(B, out): streams tiles through the
+    VMEM-resident net.  Returns (new_params, per-tile losses)."""
+    batch, d_in = x.shape
+    out_dim = y.shape[-1]
+    assert d_in <= PAD, f"feature dim {d_in} > PAD={PAD}"
+    assert batch % tile_batch == 0, (batch, tile_batch)
+    x_pad = jnp.zeros((batch, PAD), jnp.float32).at[:, :d_in].set(x)
+    y_pad = jnp.zeros((batch, PAD), jnp.float32).at[:, :out_dim].set(y)
+    w_pad, b_pad = pad_params(params)
+    w_new, b_new, losses = fused_train_call(
+        x_pad, y_pad, w_pad, b_pad, n_layers=len(params), out_dim=out_dim,
+        lr=lr, tile_batch=tile_batch, qat=qat, interpret=interpret)
+    return unpad_params(w_new, b_new, params), losses

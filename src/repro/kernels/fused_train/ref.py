@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the fused training kernel.
+
+Semantics being checked: sequential SGD over batch tiles — for each tile,
+compute the MSE loss/grads of the *current* weights via ``jax.value_and_grad``
+(autodiff is the gradient oracle; the kernel hand-derives Eq. 2), then apply
+one SGD update.  ``tile_batch=1`` is the paper-faithful per-sample stream.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mrf_net
+
+
+def _tile_loss(params, x, y, qat: bool):
+    if qat:
+        def fq(w):
+            s = jnp.max(jnp.abs(w), axis=0, keepdims=True) / 127.0 + 1e-12
+            q = jnp.clip(jnp.round(w / s), -127, 127) * s
+            return w + jax.lax.stop_gradient(q - w)  # STE, matches kernel fwd math
+        qparams = [{"w": fq(p["w"]), "b": p["b"]} for p in params]
+    else:
+        qparams = params
+    pred = mrf_net.forward(qparams, x)
+    return jnp.mean(jnp.square(pred - y))
+
+
+def ref_train(params, x, y, *, lr: float, tile_batch: int, qat: bool = False):
+    """Returns (new_params, per-tile losses). x: (B, D_in), y: (B, out)."""
+    batch = x.shape[0]
+    assert batch % tile_batch == 0
+    n_tiles = batch // tile_batch
+    xt = x.reshape(n_tiles, tile_batch, -1)
+    yt = y.reshape(n_tiles, tile_batch, -1)
+
+    def step(params, xy):
+        xi, yi = xy
+        loss, grads = jax.value_and_grad(_tile_loss)(params, xi, yi, qat)
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return params, loss
+
+    return jax.lax.scan(step, params, (xt, yt))

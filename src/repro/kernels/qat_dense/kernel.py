@@ -1,0 +1,81 @@
+"""Tiled int8 x int8 -> int32 dense layer with fused requantization + ReLU.
+
+This is the deployment form of the paper's full-integer network (QAT export):
+the TPU MXU executes int8 matmuls at 2x the bf16 rate (394 TOPS on v5e), and
+the fused epilogue (bias add, fp32 rescale, round, clamp) keeps the whole
+layer a single VMEM-resident pass — the TPU analogue of the paper's
+integer node function, Eq. (1).
+
+Layout: classic (m, n, k) grid with an int32 VMEM accumulator; K is the
+innermost (fastest-varying) grid axis so the accumulator pattern is the
+standard Pallas revisiting-output-block idiom.
+
+The epilogue matches ``repro.core.qat.int_dense`` op-for-op (int32 accumulate,
+fp32 multiply, round-to-nearest-even, clamp) — the tests assert **bit-exact**
+agreement, mirroring the paper's FPGA-vs-Python exactness check.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref, *,
+            n_k: int, relu: bool, float_out: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        x_ref[...].astype(jnp.int8), w_ref[...].astype(jnp.int8),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...] + b_ref[...].astype(jnp.int32)
+        scaled = acc.astype(jnp.float32) * s_ref[...]
+        if float_out:
+            o_ref[...] = scaled
+        else:
+            y = jnp.round(scaled)
+            lo = 0.0 if relu else -128.0
+            o_ref[...] = jnp.clip(y, lo, 127.0).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "float_out", "block_m",
+                                             "block_n", "block_k", "interpret"))
+def qat_dense_call(x_q, w_q, b_q, scale, *, relu: bool = True,
+                   float_out: bool = False, block_m: int = 128,
+                   block_n: int = 128, block_k: int = 128,
+                   interpret: bool = True):
+    """x_q: (M, K) int8; w_q: (K, N) int8; b_q: (N,) int32; scale: (N,) fp32.
+
+    M, K, N must be multiples of the block sizes (ops.py pads).
+    Returns (M, N) int8 (requantized) or fp32 (float_out, the linear head).
+    """
+    m, k = x_q.shape
+    _, n = w_q.shape
+    n_m, n_n, n_k = m // block_m, n // block_n, k // block_k
+    out_dtype = jnp.float32 if float_out else jnp.int8
+    kern = functools.partial(_kernel, n_k=n_k, relu=relu, float_out=float_out)
+    return pl.pallas_call(
+        kern,
+        grid=(n_m, n_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q, b_q.reshape(1, -1), scale.reshape(1, -1))

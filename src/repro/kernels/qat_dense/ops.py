@@ -1,0 +1,53 @@
+"""Public wrapper for the int8 dense kernel: pads ragged shapes to MXU tiles,
+dispatches the kernel, and slices the result back.  Also provides
+``int_forward_pallas`` — the full-integer MRF network inference built from
+this kernel, interchangeable with ``repro.core.qat.int_forward``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.qat_dense.kernel import qat_dense_call
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def qat_dense(x_q, w_q, b_q, scale, *, relu: bool = True, float_out: bool = False,
+              block: int = 128, interpret: bool = True):
+    """Ragged-shape int8 dense layer. x_q (M,K) int8, w_q (K,N) int8,
+    b_q (N,) int32, scale (N,) fp32 -> (M,N) int8 or fp32."""
+    m, n = x_q.shape[0], w_q.shape[1]
+    xp = _pad_to(_pad_to(x_q, block, 0), block, 1)
+    wp = _pad_to(_pad_to(w_q, block, 0), block, 1)
+    bp = _pad_to(b_q, block, 0)
+    sp = _pad_to(scale, block, 0)
+    out = qat_dense_call(xp, wp, bp, sp, relu=relu, float_out=float_out,
+                         block_m=block, block_n=block, block_k=block,
+                         interpret=interpret)
+    return out[:m, :n]
+
+
+def int_forward_pallas(int_layers, x, *, interpret: bool = True):
+    """Full-integer MRF inference on the Pallas path (cf. qat.int_forward)."""
+    from repro.core.qat import quantize_input
+
+    h = quantize_input(x, int_layers[0].s_in)
+    for i, layer in enumerate(int_layers):
+        last = layer.s_out is None
+        if last:
+            scale = layer.s_in * layer.s_w
+            h = qat_dense(h, layer.w_q, layer.b_q, scale,
+                          relu=False, float_out=True, interpret=interpret)
+        else:
+            scale = (layer.s_in * layer.s_w) / layer.s_out
+            h = qat_dense(h, layer.w_q, layer.b_q, scale,
+                          relu=True, float_out=False, interpret=interpret)
+    return h

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the int8 dense kernel — same math as
+``repro.core.qat.int_dense`` but standalone so the kernel tests don't depend
+on the QAT export pipeline."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_qat_dense(x_q, w_q, b_q, scale, *, relu: bool = True, float_out: bool = False):
+    acc = jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32)) + b_q.astype(jnp.int32)
+    scaled = acc.astype(jnp.float32) * scale
+    if float_out:
+        return scaled
+    y = jnp.round(scaled)
+    lo = 0.0 if relu else -128.0
+    return jnp.clip(y, lo, 127.0).astype(jnp.int8)

@@ -1,0 +1,291 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# (the two lines above MUST precede any jax-importing module: jax locks the
+#  device count at first backend init — see the multi-pod dry-run contract)
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo_cost import analyze_hlo
+from repro.analysis.roofline import roofline_terms
+from repro.configs import ARCHS, cells_for, get_config
+from repro.configs.base import ALL_CELLS, ModelConfig, ShapeCell, active_param_count, param_count
+from repro.dist.sharding import use_rules
+from repro.launch import input_specs as specs_mod
+from repro.launch.mesh import make_production_mesh, rules_for
+from repro.models import registry
+from repro.optim import adam
+from repro.serve.decode import make_serve_step
+from repro.train.step import TrainState, init_train_state, make_train_step
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+# --------------------------------------------------------------------------
+# per-cell lowering
+# --------------------------------------------------------------------------
+
+def _train_artifacts(cfg, cell, rules, tp, microbatches):
+    fns = registry.build(cfg, tp=tp)
+    opt = adam(1e-4)
+    step = make_train_step(fns.loss, opt, microbatches=microbatches)
+
+    params_s = specs_mod.params_specs(cfg, tp)
+    state_s = jax.eval_shape(lambda p: init_train_state(p, opt), params_s)
+    batch_s = specs_mod.batch_specs(cfg, cell)
+
+    p_axes = fns.param_axes()
+    p_shard = specs_mod.to_shardings(p_axes, rules)
+    state_shard = TrainState(
+        step=NamedSharding(rules.mesh, P()),
+        params=p_shard,
+        opt_state=type(state_s.opt_state)(
+            step=NamedSharding(rules.mesh, P()), mu=p_shard, nu=p_shard),
+        ef_residual=None,
+    )
+    batch_shard = specs_mod.to_shardings(specs_mod.batch_axes(cfg, cell), rules)
+    metrics_shard = {"loss": NamedSharding(rules.mesh, P()),
+                     "grad_norm": NamedSharding(rules.mesh, P())}
+    jitted = jax.jit(step, in_shardings=(state_shard, batch_shard),
+                     out_shardings=(state_shard, metrics_shard),
+                     donate_argnums=(0,))
+    return jitted, (state_s, batch_s)
+
+
+def _prefill_artifacts(cfg, cell, rules, tp):
+    fns = registry.build(cfg, tp=tp)
+
+    def prefill_step(params, batch):
+        cache, logits = fns.prefill(params, batch)
+        return cache, jnp.argmax(logits, -1).astype(jnp.int32)
+
+    params_s = specs_mod.params_specs(cfg, tp)
+    batch_s = specs_mod.batch_specs(cfg, cell)
+    p_shard = specs_mod.to_shardings(fns.param_axes(), rules)
+    b_shard = specs_mod.to_shardings(specs_mod.batch_axes(cfg, cell), rules)
+    cache_shard = specs_mod.to_shardings(registry.cache_axes(cfg), rules)
+    tok_shard = specs_mod.to_shardings(("batch",), rules)
+    jitted = jax.jit(prefill_step, in_shardings=(p_shard, b_shard),
+                     out_shardings=(cache_shard, tok_shard))
+    return jitted, (params_s, batch_s)
+
+
+def _decode_artifacts(cfg, cell, rules, tp, *, serve_bf16=False,
+                      serve_weights="fsdp"):
+    fns = registry.build(cfg, tp=tp)
+    serve = make_serve_step(fns)
+
+    params_s = specs_mod.params_specs(cfg, tp)
+    if serve_bf16:  # inference weights in bf16 (halves weight-stream bytes)
+        params_s = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+            params_s)
+    dec = specs_mod.decode_specs(cfg, cell, tp)
+    p_rules = rules
+    if serve_weights == "tp":
+        # inference wants TP-only weight sharding: no per-token FSDP gathers
+        from repro.dist.sharding import with_overrides
+        p_rules = with_overrides(rules, fsdp=None)
+    p_shard = specs_mod.to_shardings(fns.param_axes(), p_rules)
+    d_ax = specs_mod.decode_axes(cfg)
+    cache_shard = specs_mod.to_shardings(d_ax["cache"], rules)
+    tok_shard = specs_mod.to_shardings(d_ax["tokens"], rules)
+    len_shard = NamedSharding(rules.mesh, P())
+    jitted = jax.jit(serve,
+                     in_shardings=(p_shard, cache_shard, tok_shard, len_shard),
+                     out_shardings=(tok_shard, cache_shard),
+                     donate_argnums=(1,))
+    return jitted, (params_s, dec["cache"], dec["tokens"], dec["cache_len"])
+
+
+def lower_cell(cfg: ModelConfig, cell: ShapeCell, mesh, *,
+               microbatches: int = 1, sequence_parallel: bool = False,
+               quant: str | None = None, parallel_block: bool = False,
+               remat: str = "full", decode_unroll: bool = False,
+               serve_bf16: bool = False, serve_weights: str = "fsdp",
+               label: str = "baseline") -> dict:
+    """lower + compile one (arch x shape x mesh) cell; return the §Dry-run /
+    §Roofline record."""
+    tp = mesh.shape["model"]
+    chips = mesh.size
+    if quant:
+        cfg = dataclasses.replace(cfg, quant=quant)
+    if parallel_block:
+        cfg = dataclasses.replace(cfg, parallel_block=True)
+    if remat != "full":
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if decode_unroll:
+        cfg = dataclasses.replace(cfg, decode_unroll=True)
+    rules = rules_for(mesh, global_batch=cell.global_batch,
+                      sequence_parallel=sequence_parallel)
+
+    t0 = time.perf_counter()
+    with use_rules(rules):
+        if cell.kind == "train":
+            jitted, args = _train_artifacts(cfg, cell, rules, tp, microbatches)
+        elif cell.kind == "prefill":
+            jitted, args = _prefill_artifacts(cfg, cell, rules, tp)
+        else:
+            jitted, args = _decode_artifacts(cfg, cell, rules, tp,
+                                             serve_bf16=serve_bf16,
+                                             serve_weights=serve_weights)
+        lowered = jitted.lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+
+    record = {
+        "arch": cfg.name, "shape": cell.name, "kind": cell.kind,
+        "mesh": dict(mesh.shape), "chips": chips, "label": label,
+        "options": {"microbatches": microbatches, "sp": sequence_parallel,
+                    "quant": quant or cfg.quant,
+                    "parallel_block": parallel_block, "remat": remat},
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+
+    # ---- memory analysis (proves it fits) --------------------------------
+    try:
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        }
+        record["memory"]["peak_per_device_bytes"] = (
+            record["memory"]["argument_bytes"]
+            + record["memory"]["output_bytes"]
+            + record["memory"]["temp_bytes"]
+            - record["memory"]["alias_bytes"])
+    except Exception as e:  # pragma: no cover
+        record["memory"] = {"error": str(e)[:200]}
+
+    # ---- trip-count-aware HLO cost model (repro.analysis.hlo_cost) -------
+    # xla's cost_analysis counts while bodies once; our analyzer resolves
+    # trip counts / fusions, giving per-device flops, HBM-proxy bytes and
+    # collective wire bytes from the partitioned module.
+    hlo = compiled.as_text()
+    hc = analyze_hlo(hlo)
+    record["hlo_cost"] = {"flops": hc["flops"], "hbm_bytes": hc["hbm_bytes"],
+                          "hbm_by_kind": hc["hbm_by_kind"]}
+    record["collectives"] = hc["collectives"]
+    record["hlo_bytes_len"] = len(hlo)
+    xla_cost = {}
+    try:  # raw xla numbers kept for reference
+        xla_cost = dict(compiled.cost_analysis() or {})
+    except Exception:
+        pass
+    record["xla_cost_raw"] = {k: xla_cost[k] for k in ("flops", "bytes accessed")
+                              if k in xla_cost}
+
+    # ---- roofline terms ---------------------------------------------------
+    flops = float(hc["flops"])
+    bytes_acc = float(hc["hbm_bytes"])
+    coll = hc["collectives"]
+    n_active = active_param_count(cfg)
+    n_total = param_count(cfg)
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    if cell.kind == "train":
+        model_flops = 6.0 * n_active * tokens
+    else:
+        model_flops = 2.0 * n_active * tokens
+    int8_frac = (float(hc.get("flops_int8", 0.0)) / flops) if flops else 0.0
+    record["hlo_cost"]["flops_int8"] = hc.get("flops_int8", 0.0)
+    record["params"] = {"total": n_total, "active": n_active}
+    record["model_flops_total"] = model_flops
+    record["roofline"] = roofline_terms(
+        flops_per_device=flops, bytes_per_device=bytes_acc,
+        collective_bytes_per_device=float(coll.get("total", 0)),
+        chips=chips, model_flops_total=model_flops, int8_fraction=int8_frac)
+    return record
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def run_cells(archs, shapes, meshes, *, label="baseline", out_dir=OUT_DIR,
+              **opts):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    results = []
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        for arch in archs:
+            cfg = get_config(arch)
+            for cell in cells_for(cfg):
+                if shapes and cell.name not in shapes:
+                    continue
+                tag = f"{arch}_{cell.name}_{mesh_name}_{label}"
+                path = out_dir / f"{tag}.json"
+                print(f"=== {tag} ===", flush=True)
+                try:
+                    rec = lower_cell(cfg, cell, mesh, label=label, **opts)
+                    rec["status"] = "ok"
+                except Exception as e:
+                    rec = {"arch": arch, "shape": cell.name, "mesh": mesh_name,
+                           "label": label, "status": "error",
+                           "error": f"{type(e).__name__}: {e}"[:2000]}
+                    print("  ERROR:", rec["error"][:300], flush=True)
+                path.write_text(json.dumps(rec, indent=1, default=str))
+                if rec.get("status") == "ok":
+                    r = rec["roofline"]
+                    print(f"  compile={rec['compile_s']:.1f}s "
+                          f"flops/dev={rec['hlo_cost']['flops']:.3e} "
+                          f"coll={rec['collectives'].get('total', 0):.3e}B "
+                          f"dom={r['dominant']} bound={r['t_bound_s']:.4f}s "
+                          f"frac={r['roofline_fraction']:.2f}", flush=True)
+                results.append(rec)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="arch id (repeatable; default: all 10)")
+    ap.add_argument("--shape", action="append", default=None,
+                    help="cell name filter (train_4k/prefill_32k/...)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--label", default="baseline")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--sp", action="store_true", help="sequence parallelism")
+    ap.add_argument("--quant", default=None,
+                    choices=[None, "qat-int8", "int8-hlo"])
+    ap.add_argument("--parallel-block", action="store_true",
+                    help="PaLM-style attn ∥ mlp (1 TP all-reduce per layer)")
+    ap.add_argument("--remat", default="full", choices=["full", "save_attn"])
+    ap.add_argument("--decode-unroll", action="store_true",
+                    help="python-loop decode layers, per-layer donated caches")
+    ap.add_argument("--serve-bf16", action="store_true",
+                    help="bf16 inference weights")
+    ap.add_argument("--serve-weights", default="fsdp", choices=["fsdp", "tp"],
+                    help="inference weight sharding (tp = no per-token gathers)")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = args.arch or list(ARCHS)
+    results = run_cells(archs, args.shape, meshes, label=args.label,
+                        out_dir=pathlib.Path(args.out),
+                        microbatches=args.microbatches,
+                        sequence_parallel=args.sp, quant=args.quant,
+                        parallel_block=args.parallel_block, remat=args.remat,
+                        decode_unroll=args.decode_unroll,
+                        serve_bf16=args.serve_bf16,
+                        serve_weights=args.serve_weights)
+    n_ok = sum(r.get("status") == "ok" for r in results)
+    print(f"\n{n_ok}/{len(results)} cells OK")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

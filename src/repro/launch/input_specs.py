@@ -1,0 +1,82 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` returns weak-type-correct, shardable specs for each model
+input — no device allocation — so the dry-run can ``jit(...).lower(**specs)``
+the full-size configs on the placeholder mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.dist.sharding import AxisRules, axes_to_spec
+from repro.models import registry
+from repro.models.encdec import enc_len_for
+
+S = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Train/prefill batch: token ids (+ stub-frontend embeddings)."""
+    b, s = cell.global_batch, cell.seq_len
+    batch: dict[str, Any] = {"tokens": S((b, s), jnp.int32)}
+    if cell.kind == "train":
+        batch["labels"] = S((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = S((b, cfg.n_prefix_embeds, cfg.d_model),
+                                   jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = S((b, enc_len_for(s), cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def batch_axes(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    ax: dict[str, Any] = {"tokens": ("batch", None)}
+    if cell.kind == "train":
+        ax["labels"] = ("batch", None)
+    if cfg.family == "vlm":
+        ax["prefix_embeds"] = ("batch", None, None)
+    if cfg.family == "encdec":
+        ax["frames"] = ("batch", "act_seq", None)
+    return ax
+
+
+def decode_specs(cfg: ModelConfig, cell: ShapeCell, tp: int) -> dict:
+    """serve_step inputs: one new token + a seq_len KV cache."""
+    b, s = cell.global_batch, cell.seq_len
+    fns = registry.build(cfg, tp=tp)
+    cache = jax.eval_shape(lambda: fns.init_cache(b, s))
+    return {"cache": cache,
+            "tokens": S((b,), jnp.int32),
+            "cache_len": S((), jnp.int32)}
+
+
+def decode_axes(cfg: ModelConfig) -> dict:
+    return {"cache": registry.cache_axes(cfg),
+            "tokens": ("batch",),
+            "cache_len": ()}
+
+
+def params_specs(cfg: ModelConfig, tp: int):
+    fns = registry.build(cfg, tp=tp)
+    return jax.eval_shape(lambda: fns.init(jax.random.PRNGKey(0)))
+
+
+def to_shardings(axes_tree, rules: AxisRules):
+    from repro.dist.sharding import is_axes
+    mesh = rules.mesh
+
+    def one(axes):
+        return NamedSharding(mesh, axes_to_spec(axes, rules))
+
+    return jax.tree.map(one, axes_tree, is_leaf=is_axes)
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

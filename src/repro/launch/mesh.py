@@ -1,0 +1,57 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first init).
+
+Topology (TPU v5e target):
+  single pod : (data=16, model=16) = 256 chips — model axis within the
+               high-bandwidth ICI domain, data axis across it.
+  multi-pod  : (pod=2, data=16, model=16) = 512 chips — the pod axis crosses
+               DCN; only data parallelism (gradient all-reduce, optionally
+               int8-compressed) crosses it.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import AxisType
+
+from repro.dist.sharding import (AxisRules, MULTI_POD_RULES, SINGLE_POD_RULES,
+                                 with_overrides)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()[:n]
+    assert len(devices) == n, (
+        f"need {n} devices; run under XLA_FLAGS=--xla_force_host_platform_"
+        f"device_count=512 (have {len(jax.devices())})")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes),
+                         devices=devices)
+
+
+def rules_for(mesh, *, global_batch: int, sequence_parallel: bool = False) -> AxisRules:
+    """Axis rules bound to a mesh, degrading batch sharding when the global
+    batch doesn't divide the batch axes (e.g. long_500k's batch=1)."""
+    multi = "pod" in mesh.axis_names
+    base = MULTI_POD_RULES if multi else SINGLE_POD_RULES
+    batch_axes = ("pod", "data") if multi else ("data",)
+    denom = math.prod(mesh.shape[a] for a in batch_axes)
+    overrides = {}
+    if global_batch % denom != 0:
+        if not multi and global_batch % mesh.shape["data"] == 0:
+            pass
+        else:
+            # try data-only sharding on multi-pod, else replicate
+            if multi and global_batch % mesh.shape["data"] == 0:
+                overrides["batch"] = "data"
+            else:
+                overrides["batch"] = None
+    if sequence_parallel:
+        overrides["act_seq"] = "model"
+    rules = AxisRules(rules={**base.rules, **overrides}, mesh=mesh)
+    return rules

@@ -1,0 +1,5 @@
+# Architecture zoo: composable JAX model definitions (pure functions over
+# param pytrees) covering dense GQA decoders, MoE, SSM (mamba2/SSD), hybrid
+# attn+SSM, encoder-decoder, and VLM backbones.  All support:
+#   train forward (CE loss), prefill (KV-cache build), decode (1 token)
+# with logical-axis shardings supplied by repro.dist.sharding.

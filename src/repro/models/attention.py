@@ -1,0 +1,263 @@
+"""GQA attention: chunked-causal training/prefill path and split-KV decode.
+
+Training/prefill: online q-chunked attention — scores are materialised one
+query chunk at a time (memory O(chunk * S) instead of O(S^2)), full softmax
+per row.  Causal, sliding-window, and cross (unmasked) variants share one
+code path via the mask rule.
+
+Decode: the KV cache is *sequence-sharded* over the ``model`` mesh axis
+("cache_seq" logical axis).  Scores/softmax/AV are expressed as plain einsums
+with sharding constraints; GSPMD turns the softmax max/sum and the AV
+contraction into the flash-decoding LSE-combine collectives (small
+all-reduces of (B, Hq)-sized stats) — exact for any head count, no KV head
+replication (DESIGN.md §5).
+
+TP head padding happens at *param construction* (configs.base.padded_heads):
+the q-head count Hq' divides tp and the KV heads are group-replicated to
+Hkv' = tp when the true counts don't divide.  Padded q heads have zero
+wq/wo weights so they contribute nothing (waste is charged to the
+MODEL_FLOPS/HLO_FLOPS ratio in the roofline).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense, normal_init, shard
+
+NEG_INF = -1e30
+
+
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray   # (d, Hq*dh)
+    wk: jnp.ndarray   # (d, Hkv*dh)
+    wv: jnp.ndarray   # (d, Hkv*dh)
+    wo: jnp.ndarray   # (Hq*dh, d)
+    bq: jnp.ndarray | None
+    bk: jnp.ndarray | None
+    bv: jnp.ndarray | None
+
+
+def init_attn(keys, d_model, hq, hkv, dh, qkv_bias=False, true_hq=None):
+    """true_hq: unpadded query-head count — padded heads get zero weights."""
+    wq = normal_init(next(keys), (d_model, hq * dh))
+    wo = normal_init(next(keys), (hq * dh, d_model), scale=0.02 / math.sqrt(2))
+    if true_hq is not None and true_hq < hq:
+        wq = wq.at[:, true_hq * dh:].set(0.0)
+        wo = wo.at[true_hq * dh:, :].set(0.0)
+    return AttnParams(
+        wq=wq,
+        wk=normal_init(next(keys), (d_model, hkv * dh)),
+        wv=normal_init(next(keys), (d_model, hkv * dh)),
+        wo=wo,
+        bq=jnp.zeros((hq * dh,), jnp.float32) if qkv_bias else None,
+        bk=jnp.zeros((hkv * dh,), jnp.float32) if qkv_bias else None,
+        bv=jnp.zeros((hkv * dh,), jnp.float32) if qkv_bias else None,
+    )
+
+
+def attn_axes(qkv_bias=False):
+    return AttnParams(
+        wq=(None, "fsdp", "tp"), wk=(None, "fsdp", "tp"), wv=(None, "fsdp", "tp"),
+        wo=(None, "tp", "fsdp"),
+        bq=(None, "tp") if qkv_bias else None,
+        bk=(None, "tp") if qkv_bias else None,
+        bv=(None, "tp") if qkv_bias else None,
+    )
+
+
+# --------------------------------------------------------------------------
+# Chunked attention core (train / prefill)
+# --------------------------------------------------------------------------
+
+def _mask(q_pos, k_pos, *, causal: bool, window):
+    """(Cq, S) boolean keep-mask. ``window`` may be a traced scalar (hybrid
+    models switch SWA/global per layer inside a scan); None = no window."""
+    keep = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        keep &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        keep &= k_pos[None, :] > q_pos[:, None] - window
+    return keep
+
+
+def attention(q, k, v, *, causal: bool = True, window=None,
+              q_chunk: int = 512, q_offset=0):
+    """q: (B, Sq, Hq, dh); k, v: (B, Sk, Hkv, dh). Returns (B, Sq, Hq, dh).
+
+    Hq must be a multiple of Hkv (GQA grouping).  Scans over query chunks so
+    peak memory is O(B * Hq * q_chunk * Sk).
+
+    With a *static* sliding window the banded path is used: each query chunk
+    only sees its (window + chunk)-wide KV band instead of the full Sk —
+    score-slab memory and FLOPs drop by ~Sk/(window+chunk) (§Perf lever).
+    """
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    if (isinstance(window, int) and window and causal and sq == sk
+            and sk >= 2 * (window + q_chunk)):
+        return _attention_banded(q, k, v, window=window, q_chunk=q_chunk)
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    nq = max(sq // q_chunk, 1)
+    q_chunk = sq // nq
+    assert sq % q_chunk == 0, (sq, q_chunk)
+
+    qc = q.reshape(b, nq, q_chunk, hkv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    k_pos = jnp.arange(sk)
+
+    def one_chunk(i, q_i):
+        # q_i: (B, Cq, Hkv, G, dh) — bf16 operands, f32 accumulation (MXU-
+        # native); probs cast back to bf16 for the AV matmul.
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", q_i, k, optimize=True,
+                       preferred_element_type=jnp.float32) * scale
+        q_pos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+        keep = _mask(q_pos, k_pos, causal=causal, window=window)
+        s = jnp.where(keep[None, :, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bqhgk,bkhd->bqhgd", p, v, optimize=True,
+                          preferred_element_type=jnp.float32).astype(q.dtype)
+
+    out = jax.lax.map(lambda args: one_chunk(*args), (jnp.arange(nq), qc))
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hq, dh)
+
+
+def _attention_banded(q, k, v, *, window: int, q_chunk: int):
+    """Sliding-window attention over static KV bands.
+
+    K/V are front-padded by ``window`` so query chunk i's band starts at a
+    static offset i*C with static size window + C; band positions outside
+    [0, Sq) or the window are masked.
+    """
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    nq = sq // q_chunk
+    assert sq % q_chunk == 0
+    band = window + q_chunk
+
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    qc = q.reshape(b, nq, q_chunk, hkv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+
+    def one_chunk(i, q_i):
+        k_b = jax.lax.dynamic_slice_in_dim(kp, i * q_chunk, band, axis=1)
+        v_b = jax.lax.dynamic_slice_in_dim(vp, i * q_chunk, band, axis=1)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", q_i, k_b, optimize=True,
+                       preferred_element_type=jnp.float32) * scale
+        q_pos = i * q_chunk + jnp.arange(q_chunk)            # global q pos
+        k_pos = i * q_chunk + jnp.arange(band) - window      # global k pos
+        keep = (k_pos[None, :] <= q_pos[:, None]) \
+            & (k_pos[None, :] > q_pos[:, None] - window) \
+            & (k_pos[None, :] >= 0)
+        s = jnp.where(keep[None, :, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(v_b.dtype)
+        return jnp.einsum("bqhgk,bkhd->bqhgd", p, v_b, optimize=True,
+                          preferred_element_type=jnp.float32).astype(q.dtype)
+
+    out = jax.lax.map(lambda args: one_chunk(*args), (jnp.arange(nq), qc))
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hq, dh)
+
+
+# --------------------------------------------------------------------------
+# Full attention block (residual-stream in/out) for train & prefill
+# --------------------------------------------------------------------------
+
+def attn_block(p: AttnParams, x, *, cfg_heads, rope_theta, causal=True,
+               window=None, positions=None, quant="none", return_kv=False,
+               kv_source=None):
+    """x: (B, S, d). cfg_heads = (hq, hkv, dh). kv_source: encoder states for
+    cross-attention (defaults to x)."""
+    hq, hkv, dh = cfg_heads
+    b, s, _ = x.shape
+    src = x if kv_source is None else kv_source
+    sk = src.shape[1]
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = dense(x, p.wq, p.bq, quant=quant).reshape(b, s, hq, dh)
+    k = dense(src, p.wk, p.bk, quant=quant).reshape(b, sk, hkv, dh)
+    v = dense(src, p.wv, p.bv, quant=quant).reshape(b, sk, hkv, dh)
+    if kv_source is None and rope_theta:  # no rope on cross-attention
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, jnp.arange(sk)[None, :], rope_theta)
+    q = shard(q, "batch", None, "tp", None)
+    k = shard(k, "batch", None, "tp", None)
+    v = shard(v, "batch", None, "tp", None)
+    out = attention(q, k, v, causal=causal, window=window)
+    out = shard(out, "batch", None, "tp", None)
+    y = dense(out.reshape(b, s, hq * dh), p.wo, quant=quant)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# --------------------------------------------------------------------------
+# Decode: one token against a sequence-sharded KV cache
+# --------------------------------------------------------------------------
+
+def decode_attention(q1, k_cache, v_cache, cache_len, *, window: int = 0):
+    """q1: (B, Hq, dh); caches: (B, S, Hkv, dh) with "cache_seq" sharded over
+    the model axis.  Returns (B, Hq, dh).
+
+    Plain einsum + softmax over the sharded S axis: GSPMD emits the
+    flash-decoding style partial-softmax combine (all-reduce of max / sum /
+    weighted values over the model axis).
+    """
+    b, hq, dh = q1.shape
+    sk, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    qg = q1.reshape(b, hkv, g, dh).astype(k_cache.dtype)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache, optimize=True,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(sk)
+    keep = pos[None, :] < cache_len  # (1, Sk)
+    if window:
+        keep &= pos[None, :] >= cache_len - window
+    s = jnp.where(keep[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache, optimize=True,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, dh).astype(q1.dtype)
+
+
+def cache_update(cache, new, index):
+    """Write one token's K or V (B, Hkv, dh) at sequence position ``index``
+    (ring-buffer modulo capacity) into a (B, S, Hkv, dh) cache."""
+    capacity = cache.shape[1]
+    idx = jnp.mod(index, capacity)
+    return jax.lax.dynamic_update_slice(
+        cache, new[:, None].astype(cache.dtype), (0, idx, 0, 0))
+
+
+def decode_attn_block(p: AttnParams, x1, cache_k, cache_v, cache_len, *,
+                      cfg_heads, rope_theta, window=0, quant="none",
+                      cross_kv=None):
+    """x1: (B, d) single-token residual. cache_*: (B, S, Hkv, dh).
+    Returns (y1, new_cache_k, new_cache_v)."""
+    hq, hkv, dh = cfg_heads
+    b, _ = x1.shape
+    q = dense(x1, p.wq, p.bq, quant=quant).reshape(b, hq, dh)
+    if cross_kv is not None:
+        k_cache, v_cache = cross_kv
+        out = decode_attention(q, k_cache, v_cache, k_cache.shape[1])
+        y = dense(out.reshape(b, hq * dh), p.wo, quant=quant)
+        return y, cache_k, cache_v
+    k = dense(x1, p.wk, p.bk, quant=quant).reshape(b, hkv, dh)
+    v = dense(x1, p.wv, p.bv, quant=quant).reshape(b, hkv, dh)
+    if rope_theta:
+        pos = cache_len[None, None] if jnp.ndim(cache_len) == 0 else cache_len[:, None]
+        q = apply_rope(q[:, None], pos, rope_theta)[:, 0]
+        k = apply_rope(k[:, None], pos, rope_theta)[:, 0]
+    cache_k = cache_update(cache_k, k, cache_len)
+    cache_v = cache_update(cache_v, v, cache_len)
+    cache_k = shard(cache_k, "batch", "cache_seq", None, None)
+    cache_v = shard(cache_v, "batch", "cache_seq", None, None)
+    out = decode_attention(q, cache_k, cache_v, cache_len + 1, window=window)
+    y = dense(out.reshape(b, hq * dh), p.wo, quant=quant)
+    return y, cache_k, cache_v

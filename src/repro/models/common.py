@@ -1,0 +1,113 @@
+"""Shared model components: RMSNorm, RoPE, QAT-able dense projection, inits.
+
+Everything is a pure function over explicit params; layers that the paper's
+technique applies to (dense projections) route through ``dense()`` which
+applies int8 fake-quant when the config asks for ``quant='qat-int8'`` —
+the LM-scale generalisation of the paper's integer training (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard as _shard  # logical-axis constraint helper
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def rms_norm(x, gain, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(jnp.square(x32), axis=-1, keepdims=True) + eps)
+    return (x32 * scale).astype(dt) * gain.astype(dt)
+
+
+def fake_quant_int8(x):
+    """Dynamic symmetric per-tensor int8 fake-quant with STE (paper's QAT,
+    stateless variant used at LM scale)."""
+    s = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / s), -127, 127) * s
+    return x + jax.lax.stop_gradient(q - x)
+
+
+@jax.custom_vjp
+def _dense_int8_core(x, w):
+    """True int8 forward dot (s8 x s8 -> s32 in the HLO, 2x MXU rate on TPU)
+    with dynamic symmetric scales; backward is the bf16 STE."""
+    sx = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    sw = jnp.max(jnp.abs(w), axis=0, keepdims=True) / 127.0 + 1e-12
+    xq = jnp.clip(jnp.round(x / sx), -127, 127).astype(jnp.int8)
+    wq = jnp.clip(jnp.round(w / sw), -127, 127).astype(jnp.int8)
+    acc = jax.lax.dot_general(xq, wq, (((x.ndim - 1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * (sx * sw)).astype(x.dtype)
+
+
+def _dense_int8_fwd(x, w):
+    return _dense_int8_core(x, w), (x, w)
+
+
+def _dense_int8_bwd(res, g):
+    x, w = res
+    dx = jnp.einsum("...f,df->...d", g, w.astype(g.dtype))
+    dw = jnp.einsum("...d,...f->df", x.astype(g.dtype), g)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_dense_int8_core.defvjp(_dense_int8_fwd, _dense_int8_bwd)
+
+
+def dense(x, w, b=None, *, quant: str = "none"):
+    """x @ w (+ b). quant='qat-int8': fake-quant both operands (semantic QAT,
+    STE backward). quant='int8-hlo': emit a real int8 dot (deployment form —
+    halves dot operand bytes, doubles MXU rate; STE backward in bf16)."""
+    if quant == "int8-hlo":
+        y = _dense_int8_core(x, w.astype(jnp.float32))
+    else:
+        if quant == "qat-int8":
+            x = fake_quant_int8(x)
+            w = fake_quant_int8(w)
+        y = jnp.dot(x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 1e4):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                  # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Inits (all fp32 masters; compute casts to bf16)
+# --------------------------------------------------------------------------
+
+def normal_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return scale * jax.random.normal(key, shape, dtype)
+
+
+def key_iter(key):
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+def shard(x, *logical_axes):
+    """Apply a logical-axis sharding constraint (no-op outside a mesh)."""
+    return _shard(x, *logical_axes)

@@ -1,0 +1,456 @@
+"""Decoder-only LM assembly for all decoder families (dense / moe / ssm /
+hybrid / vlm): init, train loss, prefill, and single-token decode.
+
+Layer stacks are *scanned* (params stacked on a leading L axis) so the HLO
+stays one block body regardless of depth — essential for 512-device dry-run
+compiles — except the hybrid family, whose per-layer cache shapes are ragged
+(SWA ring buffers vs full-length global layers), and which therefore uses an
+unrolled python loop (32 layers, small dims).
+
+The paper's technique enters through ``cfg.quant='qat-int8'``: every dense
+projection fake-quantizes weights+activations (STE) exactly as the MRF net's
+QAT (DESIGN.md §4 applicability table).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import key_iter, normal_init, rms_norm, shard
+from repro.models.mlp import init_mlp, mlp_axes, mlp_block
+
+MOE_AUX_COEF = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelFns:
+    cfg: ModelConfig
+    tp: int
+    init: Callable        # key -> params
+    param_axes: Callable  # () -> logical-axis pytree
+    loss: Callable        # (params, batch) -> scalar
+    prefill: Callable     # (params, batch) -> (cache, logits_last)
+    decode: Callable      # (params, cache, tokens1, cache_len) -> (logits, cache)
+    init_cache: Callable  # (batch, seq) -> cache pytree (zeros)
+
+
+# --------------------------------------------------------------------------
+# per-layer init / axes
+# --------------------------------------------------------------------------
+
+def _layer_init(cfg: ModelConfig, keys, tp: int):
+    d = cfg.d_model
+    hq, hkv = cfg.padded_heads(tp)
+    dh = cfg.head_dim
+    layer: dict[str, Any] = {"ln1": jnp.ones((d,), jnp.float32)}
+    if cfg.family in ("dense", "vlm", "moe", "hybrid"):
+        layer["attn"] = attn.init_attn(keys, d, hq, hkv, dh, cfg.qkv_bias,
+                                       true_hq=cfg.n_heads)
+        layer["ln2"] = jnp.ones((d,), jnp.float32)
+    if cfg.family in ("dense", "vlm", "hybrid"):
+        layer["mlp"] = init_mlp(keys, d, cfg.d_ff, cfg.gated_mlp)
+    if cfg.family == "moe":
+        layer["moe"] = moe_mod.init_moe(keys, d, cfg.d_ff, cfg.n_experts,
+                                        cfg.n_shared_experts, cfg.gated_mlp)
+    if cfg.family in ("ssm", "hybrid"):
+        nh = _ssm_heads(cfg, tp)
+        layer["ssm"] = ssm_mod.init_ssm(keys, d, nh * cfg.ssm_head_dim,
+                                        cfg.ssm_state, nh)
+    return layer
+
+
+def _layer_axes(cfg: ModelConfig):
+    layer: dict[str, Any] = {"ln1": (None, None)}
+    if cfg.family in ("dense", "vlm", "moe", "hybrid"):
+        layer["attn"] = attn.attn_axes(cfg.qkv_bias)
+        layer["ln2"] = (None, None)
+    if cfg.family in ("dense", "vlm", "hybrid"):
+        layer["mlp"] = mlp_axes(cfg.gated_mlp)
+    if cfg.family == "moe":
+        layer["moe"] = moe_mod.moe_axes(cfg.n_shared_experts, cfg.gated_mlp)
+    if cfg.family in ("ssm", "hybrid"):
+        layer["ssm"] = ssm_mod.ssm_axes()
+    return layer
+
+
+def _ssm_heads(cfg: ModelConfig, tp: int) -> int:
+    nh = cfg.n_ssm_heads
+    return -(-nh // tp) * tp  # pad to multiple of tp
+
+
+def _global_flags(cfg: ModelConfig):
+    """Hybrid: which layers use full (global) attention vs SWA.
+    Config-static (numpy) so cache construction can branch on it."""
+    import numpy as np
+    if cfg.family != "hybrid" or not cfg.global_layer_every:
+        return np.zeros((cfg.n_layers,), bool)
+    idx = np.arange(cfg.n_layers)
+    flags = (idx % cfg.global_layer_every) == 0
+    flags[cfg.n_layers - 1] = True  # hymba: first / periodic / last
+    return flags
+
+
+def init_lm(cfg: ModelConfig, key, tp: int = 1):
+    keys = key_iter(key)
+    vp = cfg.padded_vocab(tp)
+    d = cfg.d_model
+    layers = [_layer_init(cfg, keys, tp) for _ in range(cfg.n_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "embed": normal_init(next(keys), (vp, d)),
+        "layers": stacked,
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "head": normal_init(next(keys), (d, vp)),
+    }
+
+
+def lm_param_axes(cfg: ModelConfig):
+    return {
+        "embed": ("tp", "fsdp"),
+        "layers": _layer_axes(cfg),
+        "final_norm": (None,),
+        "head": ("fsdp", "tp"),
+    }
+
+
+# --------------------------------------------------------------------------
+# block forward (train / prefill share it)
+# --------------------------------------------------------------------------
+
+def _block(cfg: ModelConfig, tp: int, h, lp, is_global, *, return_kv: bool):
+    """One residual block. h: (B, S, d)."""
+    heads = (*cfg.padded_heads(tp), cfg.head_dim)
+    q = cfg.quant
+    kv = None
+    aux = jnp.float32(0.0)
+    x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        nh = _ssm_heads(cfg, tp)
+        out = ssm_mod.ssm_block(lp["ssm"], x, n_heads=nh,
+                                head_dim=cfg.ssm_head_dim,
+                                n_state=cfg.ssm_state, chunk=cfg.ssm_chunk,
+                                quant=q, return_cache=return_kv)
+        if return_kv:
+            out, kv = out
+        return h + out, kv, aux
+    if cfg.family == "hybrid":
+        # hybrid layers are python-unrolled, so the SWA window is STATIC per
+        # layer -> the banded attention path applies (§Perf lever B).
+        window = None if bool(is_global) else cfg.swa_window
+        a_out = attn.attn_block(lp["attn"], x, cfg_heads=heads,
+                                rope_theta=cfg.rope_theta, causal=True,
+                                window=window, quant=q, return_kv=return_kv)
+        s_out = ssm_mod.ssm_block(lp["ssm"], x, n_heads=_ssm_heads(cfg, tp),
+                                  head_dim=cfg.ssm_head_dim,
+                                  n_state=cfg.ssm_state, chunk=cfg.ssm_chunk,
+                                  quant=q, return_cache=return_kv)
+        if return_kv:
+            a_out, akv = a_out
+            s_out, skv = s_out
+            kv = (akv, skv)
+        h = h + 0.5 * (a_out + s_out)
+        h = h + mlp_block(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps), quant=q)
+        return h, kv, aux
+    # attention families
+    win = cfg.swa_window if cfg.swa_window else None
+    a_out = attn.attn_block(lp["attn"], x, cfg_heads=heads,
+                            rope_theta=cfg.rope_theta, causal=True,
+                            window=win, quant=q, return_kv=return_kv)
+    if return_kv:
+        a_out, kv = a_out
+    if cfg.remat == "save_attn":
+        from jax.ad_checkpoint import checkpoint_name
+        a_out = checkpoint_name(a_out, "attn_out")
+    if cfg.parallel_block:
+        # PaLM/GPT-J style: attn ∥ ffn share the block input -> the two
+        # TP partial-sums add BEFORE one all-reduce (halves wire bytes).
+        if cfg.family == "moe":
+            y, aux = moe_mod.moe_block(lp["moe"], x, top_k=cfg.top_k,
+                                       capacity_factor=cfg.capacity_factor,
+                                       quant=q)
+        else:
+            y = mlp_block(lp["mlp"], x, quant=q)
+        return h + a_out + y, kv, aux
+    h = h + a_out
+    x2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = moe_mod.moe_block(lp["moe"], x2, top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor, quant=q)
+        h = h + y
+    else:
+        h = h + mlp_block(lp["mlp"], x2, quant=q)
+    return h, kv, aux
+
+
+def _embed(cfg, params, tokens, prefix_embeds=None):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    if prefix_embeds is not None:
+        p = prefix_embeds.astype(jnp.bfloat16)
+        h = jax.lax.dynamic_update_slice(h, p, (0, 0, 0))
+    return shard(h, "batch", "act_seq", None)
+
+
+def _stack_forward(cfg: ModelConfig, tp: int, params, h, *, collect_kv: bool):
+    """Runs the layer stack. Returns (h, caches (or None), aux_sum)."""
+    flags = _global_flags(cfg)
+    if cfg.family == "hybrid":
+        caches, aux_total = [], jnp.float32(0.0)
+        for l in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x, _l=l: x[_l], params["layers"])
+            h, kv, aux = _block(cfg, tp, h, lp, flags[l], return_kv=collect_kv)
+            h = shard(h, "batch", "act_seq", None)
+            caches.append(kv)
+            aux_total += aux
+        return h, (caches if collect_kv else None), aux_total
+
+    def body(carry, xs):
+        hh, aux_total = carry
+        lp, flag = xs
+        hh, kv, aux = _block(cfg, tp, hh, lp, flag, return_kv=collect_kv)
+        hh = shard(hh, "batch", "act_seq", None)
+        return (hh, aux_total + aux), kv
+
+    if cfg.remat == "save_attn":
+        policy = jax.checkpoint_policies.save_only_these_names("attn_out")
+        body = jax.checkpoint(body, policy=policy)
+    else:
+        body = jax.checkpoint(body)
+    (h, aux_total), kvs = jax.lax.scan(body, (h, jnp.float32(0.0)),
+                                       (params["layers"], flags))
+    return h, (kvs if collect_kv else None), aux_total
+
+
+def _logits(cfg, tp, params, h):
+    logits = jnp.dot(h, params["head"].astype(h.dtype))
+    axes = ("batch", None, "tp") if logits.ndim == 3 else ("batch", "tp")
+    return shard(logits, *axes)
+
+
+# --------------------------------------------------------------------------
+# train loss
+# --------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, true_vocab):
+    """logits: (B, S, V') bf16; labels: (B, S) int32, -1 = masked."""
+    lg = logits.astype(jnp.float32)
+    vp = lg.shape[-1]
+    if true_vocab < vp:
+        col = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+        lg = jnp.where(col < true_vocab, lg, -1e30)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    lab = jnp.take_along_axis(lg, jnp.maximum(labels, 0)[..., None],
+                              axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = (lse - lab) * mask
+    return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_loss(cfg: ModelConfig, tp: int, params, batch):
+    h = _embed(cfg, params, batch["tokens"], batch.get("prefix_embeds"))
+    h, _, aux = _stack_forward(cfg, tp, params, h, collect_kv=False)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(cfg, tp, params, h)
+    loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    if cfg.family == "moe":
+        loss = loss + MOE_AUX_COEF * aux / cfg.n_layers
+    return loss
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+def init_lm_cache(cfg: ModelConfig, tp: int, batch: int, seq: int):
+    hq, hkv = cfg.padded_heads(tp)
+    dh = cfg.head_dim
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        nh = _ssm_heads(cfg, tp)
+        per = ssm_mod.init_ssm_cache(batch, nh, cfg.ssm_head_dim,
+                                     cfg.ssm_state, nh * cfg.ssm_head_dim)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (L, *x.shape)), per)
+    if cfg.family == "hybrid":
+        flags = [bool(f) for f in _global_flags(cfg)]
+        nh = _ssm_heads(cfg, tp)
+        caches = []
+        for l in range(L):
+            cap = seq if flags[l] else min(cfg.swa_window, seq)
+            caches.append({
+                "k": jnp.zeros((batch, cap, hkv, dh), jnp.bfloat16),
+                "v": jnp.zeros((batch, cap, hkv, dh), jnp.bfloat16),
+                "ssm": ssm_mod.init_ssm_cache(batch, nh, cfg.ssm_head_dim,
+                                              cfg.ssm_state,
+                                              nh * cfg.ssm_head_dim),
+            })
+        return tuple(caches)
+    if cfg.decode_unroll:
+        # per-layer buffers: each is its own (donatable) argument, so the
+        # unrolled decode updates caches in place with one-token DUS only
+        return tuple({"k": jnp.zeros((batch, seq, hkv, dh), jnp.bfloat16),
+                      "v": jnp.zeros((batch, seq, hkv, dh), jnp.bfloat16)}
+                     for _ in range(L))
+    return {
+        "k": jnp.zeros((L, batch, seq, hkv, dh), jnp.bfloat16),
+        "v": jnp.zeros((L, batch, seq, hkv, dh), jnp.bfloat16),
+    }
+
+
+def lm_cache_axes(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return ssm_mod.SSMCache(
+            state=(None, "batch", "tp", None, None),
+            conv_x=(None, "batch", None, "tp"),
+            conv_B=(None, "batch", None, None),
+            conv_C=(None, "batch", None, None))
+    if cfg.family == "hybrid":
+        per = {
+            "k": ("batch", "cache_seq", None, None),
+            "v": ("batch", "cache_seq", None, None),
+            "ssm": ssm_mod.SSMCache(
+                state=("batch", "tp", None, None),
+                conv_x=("batch", None, "tp"),
+                conv_B=("batch", None, None),
+                conv_C=("batch", None, None)),
+        }
+        return tuple(per for _ in range(cfg.n_layers))
+    if cfg.decode_unroll:
+        per = {"k": ("batch", "cache_seq", None, None),
+               "v": ("batch", "cache_seq", None, None)}
+        return tuple(per for _ in range(cfg.n_layers))
+    return {"k": (None, "batch", "cache_seq", None, None),
+            "v": (None, "batch", "cache_seq", None, None)}
+
+
+# --------------------------------------------------------------------------
+# prefill
+# --------------------------------------------------------------------------
+
+def lm_prefill(cfg: ModelConfig, tp: int, params, batch):
+    """Causal forward over the prompt; returns (cache, last-token logits)."""
+    h = _embed(cfg, params, batch["tokens"], batch.get("prefix_embeds"))
+    seq = batch["tokens"].shape[1]
+    if cfg.family == "ssm":
+        # caches (stacked SSMCache from the scan ys) carry the final SSD
+        # state + conv tails so decode continues exactly where prefill ended.
+        h, cache, _ = _stack_forward(cfg, tp, params, h, collect_kv=True)
+    elif cfg.family == "hybrid":
+        h, kvs, _ = _stack_forward(cfg, tp, params, h, collect_kv=True)
+        cache = []
+        for l, (akv, skv) in enumerate(kvs):
+            k, v = akv
+            cap = min(cfg.swa_window, seq) if not bool(_global_flags(cfg)[l]) else seq
+            # ring alignment: token t lives at slot t % cap
+            k_tail = jnp.roll(k[:, -cap:], seq % cap, axis=1)
+            v_tail = jnp.roll(v[:, -cap:], seq % cap, axis=1)
+            cache.append({"k": k_tail.astype(jnp.bfloat16),
+                          "v": v_tail.astype(jnp.bfloat16),
+                          "ssm": skv})
+        cache = tuple(cache)
+    elif cfg.decode_unroll:
+        h, kvs, _ = _stack_forward(cfg, tp, params, h, collect_kv=True)
+        k, v = kvs  # stacked (L, B, S, Hkv, dh) from the scan ys
+        cache = tuple(
+            {"k": shard(k[l].astype(jnp.bfloat16), "batch", "cache_seq",
+                        None, None),
+             "v": shard(v[l].astype(jnp.bfloat16), "batch", "cache_seq",
+                        None, None)} for l in range(cfg.n_layers))
+    else:
+        h, kvs, _ = _stack_forward(cfg, tp, params, h, collect_kv=True)
+        k, v = kvs
+        cache = {"k": shard(k.astype(jnp.bfloat16), "layers", "batch",
+                            "cache_seq", None, None),
+                 "v": shard(v.astype(jnp.bfloat16), "layers", "batch",
+                            "cache_seq", None, None)}
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(cfg, tp, params, h[:, -1, :])
+    return cache, logits
+
+
+# --------------------------------------------------------------------------
+# decode (one token)
+# --------------------------------------------------------------------------
+
+def _decode_block(cfg, tp, h1, lp, cache_l, cache_len, is_global):
+    heads = (*cfg.padded_heads(tp), cfg.head_dim)
+    q = cfg.quant
+    nh = _ssm_heads(cfg, tp)
+    x = rms_norm(h1, lp["ln1"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        y, new_cache = ssm_mod.ssm_decode_step(
+            lp["ssm"], cache_l, x, n_heads=nh, head_dim=cfg.ssm_head_dim,
+            n_state=cfg.ssm_state, quant=q)
+        return h1 + y, new_cache
+    if cfg.family == "hybrid":
+        a_out, ck, cv = attn.decode_attn_block(
+            lp["attn"], x, cache_l["k"], cache_l["v"], cache_len,
+            cfg_heads=heads, rope_theta=cfg.rope_theta, quant=q)
+        s_out, new_ssm = ssm_mod.ssm_decode_step(
+            lp["ssm"], cache_l["ssm"], x, n_heads=nh,
+            head_dim=cfg.ssm_head_dim, n_state=cfg.ssm_state, quant=q)
+        h1 = h1 + 0.5 * (a_out + s_out)
+        h1 = h1 + mlp_block(lp["mlp"], rms_norm(h1, lp["ln2"], cfg.norm_eps),
+                            quant=q)
+        return h1, {"k": ck, "v": cv, "ssm": new_ssm}
+    a_out, ck, cv = attn.decode_attn_block(
+        lp["attn"], x, cache_l["k"], cache_l["v"], cache_len,
+        cfg_heads=heads, rope_theta=cfg.rope_theta, quant=q)
+    h1 = h1 + a_out
+    x2 = rms_norm(h1, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, _ = moe_mod.moe_block(lp["moe"], x2[:, None, :], top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor, quant=q)
+        h1 = h1 + y[:, 0, :]
+    else:
+        h1 = h1 + mlp_block(lp["mlp"], x2, quant=q)
+    return h1, {"k": ck, "v": cv}
+
+
+def lm_decode(cfg: ModelConfig, tp: int, params, cache, tokens1, cache_len):
+    """tokens1: (B,) int32 — the newly sampled token; cache_len: scalar."""
+    h = jnp.take(params["embed"], tokens1, axis=0).astype(jnp.bfloat16)
+    h = shard(h, "batch", None)
+    flags = _global_flags(cfg)
+    if cfg.family == "hybrid" or cfg.decode_unroll:
+        new_caches = []
+        for l in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x, _l=l: x[_l], params["layers"])
+            h, nc = _decode_block(cfg, tp, h, lp, cache[l], cache_len, flags[l])
+            new_caches.append(nc)
+        new_cache = tuple(new_caches)
+    else:
+        def body(carry, xs):
+            hh = carry
+            lp, cache_l, flag = xs
+            hh, nc = _decode_block(cfg, tp, hh, lp, cache_l, cache_len, flag)
+            return hh, nc
+
+        h, new_cache = jax.lax.scan(body, h, (params["layers"], cache, flags))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(cfg, tp, params, h)
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------
+# builder
+# --------------------------------------------------------------------------
+
+def build_lm(cfg: ModelConfig, tp: int = 1) -> ModelFns:
+    cfg.validate()
+    return ModelFns(
+        cfg=cfg, tp=tp,
+        init=partial(init_lm, cfg, tp=tp),
+        param_axes=partial(lm_param_axes, cfg),
+        loss=partial(lm_loss, cfg, tp),
+        prefill=partial(lm_prefill, cfg, tp),
+        decode=partial(lm_decode, cfg, tp),
+        init_cache=partial(init_lm_cache, cfg, tp),
+    )

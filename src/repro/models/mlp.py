@@ -1,0 +1,41 @@
+"""Dense FFN (SwiGLU / GELU) — QAT-able via the shared dense() projection."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, normal_init
+
+
+class MLPParams(NamedTuple):
+    w_gate: jnp.ndarray | None  # (d, ff) — None for non-gated
+    w_in: jnp.ndarray           # (d, ff)
+    w_out: jnp.ndarray          # (ff, d)
+
+
+def init_mlp(keys, d_model, d_ff, gated=True):
+    return MLPParams(
+        w_gate=normal_init(next(keys), (d_model, d_ff)) if gated else None,
+        w_in=normal_init(next(keys), (d_model, d_ff)),
+        w_out=normal_init(next(keys), (d_ff, d_model)),
+    )
+
+
+def mlp_axes(gated=True):
+    return MLPParams(
+        w_gate=(None, "fsdp", "tp") if gated else None,
+        w_in=(None, "fsdp", "tp"),
+        w_out=(None, "tp", "fsdp"),
+    )
+
+
+def mlp_block(p: MLPParams, x, *, quant="none"):
+    h = dense(x, p.w_in, quant=quant)
+    if p.w_gate is not None:
+        h = jax.nn.silu(dense(x, p.w_gate, quant=quant)) * h
+    else:
+        h = jnp.square(jax.nn.relu(h))  # squared-ReLU (nemotron/minitron)
+    return dense(h, p.w_out, quant=quant)

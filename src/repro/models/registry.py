@@ -1,0 +1,20 @@
+"""Architecture registry: ModelConfig -> ModelFns (init/loss/prefill/decode)
+plus cache logical axes, dispatching on family."""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.encdec import build_encdec, encdec_cache_axes
+from repro.models.lm import ModelFns, build_lm, lm_cache_axes
+
+
+def build(cfg: ModelConfig, tp: int = 1) -> ModelFns:
+    if cfg.family == "encdec":
+        return build_encdec(cfg, tp)
+    return build_lm(cfg, tp)
+
+
+def cache_axes(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec_cache_axes(cfg)
+    return lm_cache_axes(cfg)

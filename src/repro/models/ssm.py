@@ -1,0 +1,224 @@
+"""Mamba-2 (SSD, state-space duality) block: chunked quadratic-within /
+recurrent-across formulation (arXiv:2405.21060) in pure JAX.
+
+Per head h with state size N, head dim P:
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * (B_t outer x_t)
+    y_t = C_t . h_t + D * x_t
+Chunked: within a chunk the dual quadratic (attention-like) form is used;
+across chunks the state is carried by a ``lax.scan`` — the standard SSD
+schedule, MXU-friendly (einsums) instead of a length-L recurrence.
+
+TP: heads ("tp") shard over the model axis; B/C (per-group, G=1) are
+replicated — the state recurrence is head-local so the scan has no
+collectives (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, normal_init, rms_norm, shard
+
+CONV_WIDTH = 4
+
+
+class SSMParams(NamedTuple):
+    wx: jnp.ndarray        # (d, di)
+    wz: jnp.ndarray        # (d, di)
+    wB: jnp.ndarray        # (d, N)
+    wC: jnp.ndarray        # (d, N)
+    wdt: jnp.ndarray       # (d, H)
+    dt_bias: jnp.ndarray   # (H,)
+    A_log: jnp.ndarray     # (H,)
+    D: jnp.ndarray         # (H,)
+    conv_x: jnp.ndarray    # (CONV_WIDTH, di) depthwise
+    conv_B: jnp.ndarray    # (CONV_WIDTH, N)
+    conv_C: jnp.ndarray    # (CONV_WIDTH, N)
+    gate_norm: jnp.ndarray # (di,)
+    wo: jnp.ndarray        # (di, d)
+
+
+def init_ssm(keys, d_model, d_inner, n_state, n_heads):
+    return SSMParams(
+        wx=normal_init(next(keys), (d_model, d_inner)),
+        wz=normal_init(next(keys), (d_model, d_inner)),
+        wB=normal_init(next(keys), (d_model, n_state)),
+        wC=normal_init(next(keys), (d_model, n_state)),
+        wdt=normal_init(next(keys), (d_model, n_heads)),
+        dt_bias=jnp.log(jnp.expm1(jnp.full((n_heads,), 0.01))),  # softplus^-1
+        A_log=jnp.log(jnp.linspace(1.0, 16.0, n_heads)),
+        D=jnp.ones((n_heads,)),
+        conv_x=normal_init(next(keys), (CONV_WIDTH, d_inner), scale=0.1),
+        conv_B=normal_init(next(keys), (CONV_WIDTH, n_state), scale=0.1),
+        conv_C=normal_init(next(keys), (CONV_WIDTH, n_state), scale=0.1),
+        gate_norm=jnp.ones((d_inner,)),
+        wo=normal_init(next(keys), (d_inner, d_model)),
+    )
+
+
+def ssm_axes():
+    return SSMParams(
+        wx=(None, "fsdp", "tp"), wz=(None, "fsdp", "tp"),
+        wB=(None, "fsdp", None), wC=(None, "fsdp", None),
+        wdt=(None, "fsdp", "tp"),
+        dt_bias=(None, "tp"), A_log=(None, "tp"), D=(None, "tp"),
+        conv_x=(None, None, "tp"), conv_B=(None, None, None),
+        conv_C=(None, None, None),
+        gate_norm=(None, "tp"), wo=(None, "tp", "fsdp"),
+    )
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: (B, L, D); w: (W, D)."""
+    w_len = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (w_len - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(w_len))
+    return out
+
+
+def ssd_chunked(x, dt, A, Bmat, Cmat, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B, L, H, P); dt: (B, L, H) (post-softplus); A: (H,) negative;
+    Bmat/Cmat: (B, L, N).  Returns (y: (B, L, H, P), final state (B,H,P,N)).
+    """
+    b, l, h, p = x.shape
+    n = Bmat.shape[-1]
+    nc = max(l // chunk, 1)
+    q = l // nc
+    assert l % q == 0, (l, chunk)
+
+    xr = x.reshape(b, nc, q, h, p)
+    dtr = dt.reshape(b, nc, q, h)
+    br = Bmat.reshape(b, nc, q, n)
+    cr = Cmat.reshape(b, nc, q, n)
+
+    la = dtr * A[None, None, None, :]              # (B,nc,Q,H) log-decay <= 0
+    cum = jnp.cumsum(la, axis=2)                   # (B,nc,Q,H)
+
+    # intra-chunk (dual quadratic form)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cr, br, optimize=True)     # (B,nc,Q,K)
+    dec = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,Q,K,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    m = cb[..., None] * dec * dtr[:, :, None, :, :]
+    m = jnp.where(tri[None, None, :, :, None], m, 0.0)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", m, xr, optimize=True)
+
+    # per-chunk end state contribution
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)                    # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcqh,bcqn,bcqhp->bchpn", dec_end * dtr, br, xr,
+                         optimize=True)                           # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    def step(h_prev, xs):
+        cum_c, c_c, s_c = xs  # (B,Q,H), (B,Q,N), (B,H,P,N)
+        y_in = jnp.einsum("bqn,bqh,bhpn->bqhp", c_c, jnp.exp(cum_c), h_prev,
+                          optimize=True)
+        h_new = jnp.exp(cum_c[:, -1])[:, :, None, None] * h_prev + s_c
+        return h_new, y_in
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (cum.transpose(1, 0, 2, 3), cr.transpose(1, 0, 2, 3),
+          s_chunk.transpose(1, 0, 2, 3, 4))
+    h_last, y_inter = jax.lax.scan(step, h0, xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)     # (B,nc,Q,H,P)
+
+    return (y_intra + y_inter).reshape(b, l, h, p), h_last
+
+
+def ssm_block(p: SSMParams, u, *, n_heads, head_dim, n_state, chunk,
+              quant="none", return_cache=False):
+    """Full mamba2 mixer. u: (B, L, d) -> (B, L, d) [, SSMCache for decode]."""
+    b, l, _ = u.shape
+    x_raw = dense(u, p.wx, quant=quant)            # (B,L,di)
+    z = dense(u, p.wz, quant=quant)
+    bm_raw = dense(u, p.wB)
+    cm_raw = dense(u, p.wC)
+    dt_raw = dense(u, p.wdt)
+    x = jax.nn.silu(_causal_conv(x_raw, p.conv_x.astype(x_raw.dtype)))
+    bm = jax.nn.silu(_causal_conv(bm_raw, p.conv_B.astype(bm_raw.dtype)))
+    cm = jax.nn.silu(_causal_conv(cm_raw, p.conv_C.astype(cm_raw.dtype)))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias)
+    a = -jnp.exp(p.A_log.astype(jnp.float32))
+    # pad seq to a chunk multiple; dt=0 on padding -> decay 1, zero update,
+    # so the final state is unaffected and padded outputs are sliced off.
+    pad = (-l) % min(chunk, max(l, 1))
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0))
+        x, bm, cm = (jnp.pad(t, padw) for t in (x, bm, cm))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        dt = dt * (jnp.arange(l + pad) < l)[None, :, None]
+    lp_ = l + pad
+    xh = x.reshape(b, lp_, n_heads, head_dim).astype(jnp.float32)
+    xh = shard(xh, "batch", None, "tp", None)
+    y, h_last = ssd_chunked(xh, dt, a, bm.astype(jnp.float32),
+                            cm.astype(jnp.float32), chunk)
+    y = y + p.D[None, None, :, None] * xh
+    y = y.reshape(b, lp_, -1)[:, :l].astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p.gate_norm)
+    out = dense(y, p.wo, quant=quant)
+    if return_cache:
+        tail = CONV_WIDTH - 1
+        cache = SSMCache(state=h_last,
+                         conv_x=x_raw[:, -tail:].astype(jnp.bfloat16),
+                         conv_B=bm_raw[:, -tail:].astype(jnp.bfloat16),
+                         conv_C=cm_raw[:, -tail:].astype(jnp.bfloat16))
+        return out, cache
+    return out
+
+
+# --------------------------------------------------------------------------
+# Decode (single token): O(1) state update — why SSMs own long_500k.
+# --------------------------------------------------------------------------
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray      # (B, H, P, N) fp32
+    conv_x: jnp.ndarray     # (B, CONV_WIDTH-1, di)
+    conv_B: jnp.ndarray     # (B, CONV_WIDTH-1, N)
+    conv_C: jnp.ndarray     # (B, CONV_WIDTH-1, N)
+
+
+def init_ssm_cache(batch, n_heads, head_dim, n_state, d_inner):
+    return SSMCache(
+        state=jnp.zeros((batch, n_heads, head_dim, n_state), jnp.float32),
+        conv_x=jnp.zeros((batch, CONV_WIDTH - 1, d_inner), jnp.bfloat16),
+        conv_B=jnp.zeros((batch, CONV_WIDTH - 1, n_state), jnp.bfloat16),
+        conv_C=jnp.zeros((batch, CONV_WIDTH - 1, n_state), jnp.bfloat16),
+    )
+
+
+def _conv_step(cache, new, w):
+    """cache: (B, W-1, D); new: (B, D); w: (W, D) -> (out (B, D), new cache)."""
+    window = jnp.concatenate([cache, new[:, None]], axis=1)     # (B, W, D)
+    out = jnp.sum(window * w[None], axis=1)
+    return out, window[:, 1:]
+
+
+def ssm_decode_step(p: SSMParams, cache: SSMCache, u1, *, n_heads, head_dim,
+                    n_state, quant="none"):
+    """u1: (B, d) one token. Returns (y1, new_cache)."""
+    b = u1.shape[0]
+    x = dense(u1, p.wx, quant=quant)
+    z = dense(u1, p.wz, quant=quant)
+    bm = dense(u1, p.wB)
+    cm = dense(u1, p.wC)
+    dt_raw = dense(u1, p.wdt)
+    x, cx = _conv_step(cache.conv_x, x, p.conv_x.astype(x.dtype))
+    bm, cb = _conv_step(cache.conv_B, bm, p.conv_B.astype(bm.dtype))
+    cm, cc = _conv_step(cache.conv_C, cm, p.conv_C.astype(cm.dtype))
+    x, bm, cm = jax.nn.silu(x), jax.nn.silu(bm), jax.nn.silu(cm)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias)   # (B,H)
+    a = -jnp.exp(p.A_log.astype(jnp.float32))
+    xh = x.reshape(b, n_heads, head_dim).astype(jnp.float32)
+    decay = jnp.exp(dt * a[None, :])                                # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, bm.astype(jnp.float32), xh)
+    state = decay[:, :, None, None] * cache.state + upd
+    y = jnp.einsum("bn,bhpn->bhp", cm.astype(jnp.float32), state)
+    y = y + p.D[None, :, None] * xh
+    y = y.reshape(b, -1).astype(u1.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p.gate_norm)
+    y = dense(y, p.wo, quant=quant)
+    return y, SSMCache(state=state, conv_x=cx, conv_B=cb, conv_C=cc)

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import adam, sgd, Optimizer, clip_by_global_norm
+from repro.optim.grad_compression import int8_compress_decompress, error_feedback_compress

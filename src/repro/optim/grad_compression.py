@@ -1,0 +1,44 @@
+"""Gradient compression for cross-pod (DCN) gradient sync.
+
+At 512+ chips the pod axis crosses data-center network, ~25x slower than ICI.
+We ship int8 error-feedback compression (1-bit-Adam-family trick, adapted):
+each step the gradient is quantized to int8 with a per-tensor scale before the
+pod all-reduce; the quantization residual is fed back into the next step's
+gradient so the compression is unbiased in the long run.
+
+Usage inside a pjit'd train step (see train/step.py): compress -> psum over
+'pod' -> decompress.  On a single-pod mesh it's the identity.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress_decompress(g: jnp.ndarray):
+    """Quantize/dequantize one tensor to int8 (symmetric, per-tensor scale).
+
+    Returns (dequantized, residual).  Simulates exactly what the wire sees.
+    """
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127)
+    deq = q * scale
+    return deq, g - deq
+
+
+def error_feedback_compress(grads, residuals):
+    """Apply error feedback + int8 compression to a grad pytree.
+
+    residuals: pytree like grads (carried in the train state).
+    Returns (compressed_grads, new_residuals).
+    """
+    if residuals is None:
+        residuals = jax.tree.map(jnp.zeros_like, grads)
+    corrected = jax.tree.map(lambda g, r: g + r, grads, residuals)
+    out = jax.tree.map(int8_compress_decompress, corrected)
+    deq = jax.tree.map(lambda t: t[0], out,
+                       is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2)
+    res = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2)
+    return deq, res

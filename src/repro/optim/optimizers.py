@@ -1,0 +1,96 @@
+"""Optimizers from scratch (no optax): Adam (the paper's software baseline)
+and plain SGD (the paper's FPGA training rule), as pure pytree transforms.
+
+API mirrors the functional style the rest of the framework uses:
+
+    opt = adam(lr=1e-4)
+    state = opt.init(params)
+    params, state = opt.update(grads, state, params)
+
+States are pytrees with the same sharding as the params they track, so under
+pjit the optimizer shards for free (ZeRO-style partitioned states fall out of
+the FSDP param sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: object
+    nu: object
+
+
+def adam(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p)
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree.map(zeros, params),
+                         nu=jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - jnp.power(b1, t)
+        c2 = 1.0 - jnp.power(b2, t)
+
+        def upd(g, m, v, p):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / c1
+            vhat = v / c2
+            step_ = lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+            return p - step_, m, v
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamState(step=step, mu=new_m, nu=new_v)
+
+    return Optimizer(init=init, update=update)
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: object | None
+
+
+def sgd(lr: float = 1e-4, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        mom = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return SGDState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(grads, state, params):
+        if momentum:
+            new_mom = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
+            new_p = jax.tree.map(lambda p, m: p - lr * m, params, new_mom)
+            return new_p, SGDState(step=state.step + 1, momentum=new_mom)
+        new_p = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return new_p, SGDState(step=state.step + 1, momentum=None)
+
+    return Optimizer(init=init, update=update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm

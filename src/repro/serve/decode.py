@@ -1,0 +1,34 @@
+"""Serving steps: prefill (prompt -> KV cache + first logits) and decode
+(one token against a sequence-sharded KV cache), plus a greedy/temperature
+sampler.  These are the functions the decode_*/long_* dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(fns):
+    def prefill_step(params, batch):
+        cache, logits = fns.prefill(params, batch)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return cache, next_tok, logits
+
+    return prefill_step
+
+
+def make_serve_step(fns, *, temperature: float = 0.0):
+    """serve_step(params, cache, tokens, cache_len[, key]) -> (next, cache).
+
+    One new token with a KV cache of seq_len — the assigned decode cells."""
+
+    def serve_step(params, cache, tokens, cache_len, key=None):
+        logits, cache = fns.decode(params, cache, tokens, cache_len)
+        if temperature > 0.0 and key is not None:
+            next_tok = jax.random.categorical(key, logits / temperature, -1)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok.astype(jnp.int32), cache
+
+    return serve_step

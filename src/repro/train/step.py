@@ -1,0 +1,85 @@
+"""Distributed training step for the architecture zoo.
+
+Composes: CE loss forward (scanned+remat'd layer stack) -> grads ->
+optional microbatch accumulation (lax.scan over the leading microbatch axis,
+trading one weight all-gather per microbatch for a 1/M activation footprint)
+-> grad clip -> optional int8 error-feedback gradient compression (what the
+DCN-crossing pod all-reduce would carry) -> Adam/SGD update.
+
+All state (params, optimizer moments, compression residuals) is a pytree
+whose sharding follows the param logical axes, so the optimizer is
+ZeRO-partitioned for free under pjit.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import clip_by_global_norm, error_feedback_compress
+from repro.optim.optimizers import Optimizer
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: Any
+    opt_state: Any
+    ef_residual: Any | None  # int8-compression error feedback
+
+
+def init_train_state(params, opt: Optimizer, *, grad_compress: bool = False):
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt_state=opt.init(params),
+        ef_residual=jax.tree.map(jnp.zeros_like, params) if grad_compress else None,
+    )
+
+
+def make_train_step(loss_fn, opt: Optimizer, *, microbatches: int = 1,
+                    max_grad_norm: float = 1.0, grad_compress: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``batch`` leaves have a leading global-batch dim; with microbatches=M the
+    step reshapes to (M, B/M, ...) and accumulates grads sequentially.
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def resh(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(resh, batch)
+
+            def acc(carry, mb_i):
+                loss_sum, g_sum = carry
+                loss_i, g_i = grads_of(params, mb_i)
+                return (loss_sum + loss_i,
+                        jax.tree.map(jnp.add, g_sum, g_i)), None
+
+            zero = jax.tree.map(jnp.zeros_like, params)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.float32(0.0), zero), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        residual = state.ef_residual
+        if grad_compress:
+            grads, residual = error_feedback_compress(grads, residual)
+        new_params, new_opt = opt.update(grads, state.opt_state, params)
+        new_state = TrainState(step=state.step + 1, params=new_params,
+                               opt_state=new_opt, ef_residual=residual)
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step

@@ -1,0 +1,102 @@
+"""Fused training kernel vs the jax.grad oracle (kernels/fused_train/ref.py).
+
+The paper's correctness criterion is exact agreement between the accelerator
+and the Python reference at node granularity; here the entire fused
+fwd+bwd+SGD step is checked against autodiff to fp32 tolerance, across batch
+tiles, stream (per-sample) mode, and the QAT fake-quant forward.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mrf_net
+from repro.kernels.fused_train import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _setup(n_frames=32, batch=32, seed=0, hidden=mrf_net.ADAPTED_HIDDEN):
+    sizes = mrf_net.layer_sizes(n_frames, hidden)
+    params = mrf_net.init_params(jax.random.PRNGKey(seed), sizes)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (batch, sizes[0]))
+    y = jax.random.uniform(jax.random.PRNGKey(seed + 2), (batch, 2))
+    return params, x, y
+
+
+def _assert_params_close(a, b, atol=1e-5):
+    for la, lb in zip(a, b):
+        assert jnp.allclose(la["w"], lb["w"], atol=atol), float(jnp.max(jnp.abs(la["w"] - lb["w"])))
+        assert jnp.allclose(la["b"], lb["b"], atol=atol)
+
+
+@pytest.mark.parametrize("tile_batch", [1, 8, 32])
+def test_matches_autodiff_oracle(tile_batch):
+    params, x, y = _setup()
+    new_k, loss_k = ops.fused_train_step(params, x, y, lr=1e-2, tile_batch=tile_batch)
+    new_r, loss_r = ref.ref_train(params, x, y, lr=1e-2, tile_batch=tile_batch)
+    assert jnp.allclose(loss_k, loss_r, atol=1e-5)
+    _assert_params_close(new_k, new_r)
+
+
+def test_stream_mode_is_paper_sgd():
+    """tile_batch=1 must equal a hand-rolled per-sample SGD loop."""
+    params, x, y = _setup(batch=8)
+    new_k, _ = ops.fused_train_step(params, x, y, lr=5e-3, tile_batch=1)
+    p = params
+    for i in range(x.shape[0]):
+        g = jax.grad(mrf_net.mse_loss)(p, x[i:i + 1], y[i:i + 1])
+        p = jax.tree.map(lambda a, b: a - 5e-3 * b, p, g)
+    _assert_params_close(new_k, p)
+
+
+def test_qat_forward_mode():
+    params, x, y = _setup()
+    new_k, loss_k = ops.fused_train_step(params, x, y, lr=1e-2, tile_batch=16, qat=True)
+    new_r, loss_r = ref.ref_train(params, x, y, lr=1e-2, tile_batch=16, qat=True)
+    assert jnp.allclose(loss_k, loss_r, atol=1e-5)
+    _assert_params_close(new_k, new_r)
+
+
+def test_padding_is_inert():
+    """Padded lanes must stay exactly zero after a training pass."""
+    params, x, y = _setup()
+    w_pad, b_pad = ops.pad_params(params)
+    from repro.kernels.fused_train.kernel import fused_train_call, PAD
+    x_pad = jnp.zeros((32, PAD)).at[:, :x.shape[1]].set(x)
+    y_pad = jnp.zeros((32, PAD)).at[:, :2].set(y)
+    w_new, b_new, _ = fused_train_call(x_pad, y_pad, w_pad, b_pad,
+                                       n_layers=len(params), out_dim=2,
+                                       lr=1e-2, tile_batch=8)
+    sizes = [p["w"].shape for p in params]
+    for l, (i, o) in enumerate(sizes):
+        assert jnp.all(w_new[l, i:, :] == 0.0)
+        assert jnp.all(w_new[l, :, o:] == 0.0)
+        assert jnp.all(b_new[l, o:] == 0.0)
+
+
+def test_loss_decreases_over_tiles():
+    """Sequential SGD across tiles should reduce loss on average."""
+    params, x, y = _setup(batch=512, seed=3)
+    _, losses = ops.fused_train_step(params, x, y, lr=1e-1, tile_batch=32)
+    first, last = float(losses[0]), float(losses[-1])
+    assert last < first
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_frames=st.sampled_from([8, 16, 32, 64]),
+    batch=st.sampled_from([4, 16, 32]),
+    tile=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_property_kernel_equals_oracle(n_frames, batch, tile, seed):
+    if batch % tile:
+        tile = 1
+    hidden = (32, 16, 16)
+    params, x, y = _setup(n_frames=n_frames, batch=batch, seed=seed, hidden=hidden)
+    new_k, loss_k = ops.fused_train_step(params, x, y, lr=1e-2, tile_batch=tile)
+    new_r, loss_r = ref.ref_train(params, x, y, lr=1e-2, tile_batch=tile)
+    assert jnp.allclose(loss_k, loss_r, atol=1e-4)
+    _assert_params_close(new_k, new_r, atol=1e-4)

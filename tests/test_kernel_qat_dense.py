@@ -1,0 +1,67 @@
+"""int8 dense kernel vs pure-jnp oracle: BIT-EXACT on integer outputs
+(the paper's FPGA-vs-Python criterion), exact fp32 on the float head.
+Shapes/dtypes swept with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mrf_net, qat
+from repro.kernels.qat_dense import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_case(m, k, n, seed):
+    kx, kw, kb, ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.randint(kx, (m, k), -128, 128, jnp.int8)
+    w = jax.random.randint(kw, (k, n), -128, 128, jnp.int8)
+    b = jax.random.randint(kb, (n,), -2048, 2048, jnp.int32)
+    s = jax.random.uniform(ks, (n,), jnp.float32, 1e-4, 1e-2)
+    return x, w, b, s
+
+
+@pytest.mark.parametrize("mkn", [(8, 64, 32), (130, 200, 300), (1, 64, 2), (256, 256, 128)])
+@pytest.mark.parametrize("relu,float_out", [(True, False), (False, False), (False, True)])
+def test_bitexact_vs_oracle(mkn, relu, float_out):
+    x, w, b, s = _rand_case(*mkn, seed=hash(mkn) % 100)
+    got = ops.qat_dense(x, w, b, s, relu=relu, float_out=float_out)
+    want = ref.ref_qat_dense(x, w, b, s, relu=relu, float_out=float_out)
+    if float_out:
+        assert jnp.array_equal(got, want)
+    else:
+        assert bool(jnp.all(got == want)), "integer outputs must be bit-exact"
+
+
+@settings(max_examples=12, deadline=None)
+@given(m=st.integers(1, 80), k=st.integers(1, 160), n=st.integers(1, 160),
+       relu=st.booleans(), seed=st.integers(0, 2**16))
+def test_property_bitexact(m, k, n, relu, seed):
+    x, w, b, s = _rand_case(m, k, n, seed)
+    got = ops.qat_dense(x, w, b, s, relu=relu, float_out=False, block=64)
+    want = ref.ref_qat_dense(x, w, b, s, relu=relu, float_out=False)
+    assert bool(jnp.all(got == want))
+
+
+def test_full_integer_network_paths_agree():
+    """QAT export -> software integer oracle == Pallas integer network."""
+    sizes = mrf_net.layer_sizes(32)
+    params = mrf_net.init_params(jax.random.PRNGKey(1), sizes)
+    qs = qat.init_qat_state(len(params))
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, sizes[0]))
+    for _ in range(5):
+        _, qs = qat.forward_qat(params, qs, x)
+    ints = qat.export_int8(params, qs)
+    y_sw = qat.int_forward(ints, x)
+    y_pl = ops.int_forward_pallas(ints, x)
+    assert jnp.array_equal(y_sw, y_pl)
+
+
+def test_int_node_bitexact():
+    """Paper §2.2: the single-node function on the accelerator must equal the
+    software implementation exactly for identical inputs/weights/bias."""
+    x, w, b, s = _rand_case(16, 64, 16, seed=7)
+    got = ops.qat_dense(x, w, b, s, relu=True)
+    want = ref.ref_qat_dense(x, w, b, s, relu=True)
+    assert bool(jnp.all(got == want))
