@@ -1,0 +1,17 @@
+#!/usr/bin/env python
+"""CI entry point for the import-integrity check (no jax needed).
+
+Usage: ``python scripts/check_imports.py`` from anywhere; exits non-zero if
+any ``repro.*`` import names a module that does not exist under ``src/``.
+"""
+
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.tools.import_integrity import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main(REPO_ROOT))

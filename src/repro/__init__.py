@@ -1,0 +1,2 @@
+"""Reproduction package: FPGA-accelerated NN training for MRF map
+reconstruction, grown toward a production-scale sharded jax system."""

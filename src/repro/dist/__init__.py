@@ -1,0 +1,25 @@
+"""Distribution layer: logical-axis sharding rules and ambient constraints.
+
+See ``repro.dist.sharding`` for the full contract.  Everything public is
+re-exported here.
+"""
+
+from repro.dist.sharding import (AxisRules, MULTI_POD_RULES,
+                                 SINGLE_POD_RULES, axes_to_spec,
+                                 current_rules, is_axes, make_compat_mesh,
+                                 param_shardings, shard, use_rules,
+                                 with_overrides)
+
+__all__ = [
+    "AxisRules",
+    "MULTI_POD_RULES",
+    "SINGLE_POD_RULES",
+    "axes_to_spec",
+    "current_rules",
+    "is_axes",
+    "make_compat_mesh",
+    "param_shardings",
+    "shard",
+    "use_rules",
+    "with_overrides",
+]

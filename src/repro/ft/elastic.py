@@ -28,8 +28,36 @@ def reshard_tree(tree, axes_tree, new_rules: AxisRules):
 def downsize_batch_rules(rules: AxisRules, lost_hosts: int,
                          hosts_per_data_shard: int = 1) -> AxisRules:
     """Policy helper: after evicting hosts, shrink the data axis (keep model
-    axis intact — TP degree is baked into padded head counts)."""
-    # The new mesh must be constructed by the caller from surviving devices;
-    # this helper only documents/validates the policy choice.
-    del lost_hosts, hosts_per_data_shard
-    return rules
+    axis intact — TP degree is baked into padded head counts).
+
+    Validates that the eviction removes whole batch shards and leaves the
+    batch-shard pool non-empty, then returns the logical mapping detached
+    from the dead mesh.  The pool is the product of the mesh axes the
+    ``batch`` rule names (``data`` single-pod, ``pod*data`` multi-pod), so
+    losing a whole pod's hosts is a valid downsize.  The caller rebuilds the
+    survivor mesh with ``pool - lost_hosts // hosts_per_data_shard`` batch
+    shards (choosing which axis to shrink) and re-binds via
+    ``launch.mesh.rules_for`` — the mapping itself is mesh-shape-independent,
+    which is what makes the state portable.
+    """
+    if rules.mesh is None:
+        raise ValueError("rules must be bound to the pre-eviction mesh")
+    if lost_hosts <= 0:
+        raise ValueError(f"lost_hosts must be positive, got {lost_hosts}")
+    if lost_hosts % hosts_per_data_shard != 0:
+        raise ValueError(
+            f"evicting {lost_hosts} hosts is not shard-aligned "
+            f"({hosts_per_data_shard} hosts per data shard): a surviving "
+            f"data shard would straddle a dead host")
+    lost_shards = lost_hosts // hosts_per_data_shard
+    batch_axes = rules.rules.get("batch") or ("data",)
+    if isinstance(batch_axes, str):
+        batch_axes = (batch_axes,)
+    pool = 1
+    for a in batch_axes:
+        pool *= rules.mesh.shape.get(a, 1)
+    if lost_shards >= pool:
+        raise ValueError(
+            f"evicting {lost_shards} batch shards empties the batch-shard "
+            f"pool ({'x'.join(batch_axes)} had {pool})")
+    return AxisRules(rules=dict(rules.rules), mesh=None)

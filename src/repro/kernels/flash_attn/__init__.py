@@ -1,0 +1,1 @@
+"""Flash-attention kernel (pallas) + reference implementation."""

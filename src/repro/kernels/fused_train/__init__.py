@@ -1,0 +1,1 @@
+"""Fused train-step kernel (pallas) + reference implementation."""

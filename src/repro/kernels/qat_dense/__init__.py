@@ -1,0 +1,1 @@
+"""Int8 QAT dense kernel (pallas) + reference implementation."""

@@ -1,0 +1,2 @@
+"""Launchers: mesh construction, axis-rule binding, dry-run lowering, and
+the training/serving CLIs."""

@@ -1,8 +1,15 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512"
+                               ).strip()
 
-# (the two lines above MUST precede any jax-importing module: jax locks the
-#  device count at first backend init — see the multi-pod dry-run contract)
+# (the lines above MUST precede any jax-importing module: jax locks the
+#  device count at first backend init — see the multi-pod dry-run contract.
+#  Append-if-absent, not assignment: callers that want a smaller fake
+#  topology — e.g. the 16-device subprocess in tests/test_distribution.py —
+#  set the flag before importing this module and must not be clobbered, and
+#  unrelated user-set XLA flags must survive)
 
 import argparse
 import dataclasses

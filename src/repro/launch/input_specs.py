@@ -12,10 +12,9 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
 
 from repro.configs.base import ModelConfig, ShapeCell
-from repro.dist.sharding import AxisRules, axes_to_spec
+from repro.dist.sharding import AxisRules, param_shardings
 from repro.models import registry
 from repro.models.encdec import enc_len_for
 
@@ -69,13 +68,9 @@ def params_specs(cfg: ModelConfig, tp: int):
 
 
 def to_shardings(axes_tree, rules: AxisRules):
-    from repro.dist.sharding import is_axes
-    mesh = rules.mesh
-
-    def one(axes):
-        return NamedSharding(mesh, axes_to_spec(axes, rules))
-
-    return jax.tree.map(one, axes_tree, is_leaf=is_axes)
+    """Alias for the canonical mapping in repro.dist.sharding (kept under
+    its launch-era name for the dry-run call sites)."""
+    return param_shardings(axes_tree, rules)
 
 
 def tree_bytes(tree) -> int:

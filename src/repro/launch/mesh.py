@@ -16,10 +16,9 @@ from __future__ import annotations
 import math
 
 import jax
-from jax.sharding import AxisType
 
 from repro.dist.sharding import (AxisRules, MULTI_POD_RULES, SINGLE_POD_RULES,
-                                 with_overrides)
+                                 make_compat_mesh)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -30,8 +29,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     assert len(devices) == n, (
         f"need {n} devices; run under XLA_FLAGS=--xla_force_host_platform_"
         f"device_count=512 (have {len(jax.devices())})")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devices)
+    return make_compat_mesh(shape, axes, devices=devices)
 
 
 def rules_for(mesh, *, global_batch: int, sequence_parallel: bool = False) -> AxisRules:
@@ -43,14 +41,12 @@ def rules_for(mesh, *, global_batch: int, sequence_parallel: bool = False) -> Ax
     denom = math.prod(mesh.shape[a] for a in batch_axes)
     overrides = {}
     if global_batch % denom != 0:
-        if not multi and global_batch % mesh.shape["data"] == 0:
-            pass
+        if multi and global_batch % mesh.shape["data"] == 0:
+            # pod*data doesn't divide the batch but data alone does:
+            # shard over data only, replicate across pods
+            overrides["batch"] = "data"
         else:
-            # try data-only sharding on multi-pod, else replicate
-            if multi and global_batch % mesh.shape["data"] == 0:
-                overrides["batch"] = "data"
-            else:
-                overrides["batch"] = None
+            overrides["batch"] = None  # degrade to replicated batch
     if sequence_parallel:
         overrides["act_seq"] = "model"
     rules = AxisRules(rules={**base.rules, **overrides}, mesh=mesh)

@@ -1,0 +1,3 @@
+"""Repo tooling that is not part of the training/serving stack (static
+checks, CI helpers).  Kept under ``repro`` so tier-1 tests can import it
+without path games."""

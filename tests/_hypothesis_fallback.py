@@ -1,0 +1,56 @@
+"""``hypothesis`` if installed, else a deterministic single-example stand-in.
+
+The kernel property tests sweep shapes with hypothesis, but the training
+container doesn't ship it (and the repo policy is to gate missing deps, not
+install them).  Importing ``given/settings/st`` from here keeps the test
+modules collectable everywhere: with hypothesis present you get the real
+sweep; without it each ``@given`` test runs once with the *first* value of
+every strategy — a smoke check, not a property check (CI installs the real
+thing).
+"""
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, example):
+            self.example = example
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value=None):
+            return _Strategy(min_value)
+
+        @staticmethod
+        def sampled_from(elements):
+            return _Strategy(elements[0])
+
+        @staticmethod
+        def floats(min_value, max_value=None):
+            return _Strategy(min_value)
+
+        @staticmethod
+        def booleans():
+            return _Strategy(False)
+
+    strategies = _Strategies()
+
+    def settings(**_kwargs):
+        return lambda fn: fn
+
+    def given(**strategies):
+        def deco(fn):
+            # zero-arg wrapper, deliberately NOT functools.wraps: pytest must
+            # see an empty signature, or it would treat the strategy kwargs
+            # as fixtures to inject
+            def run_single_example():
+                return fn(**{k: s.example for k, s in strategies.items()})
+
+            run_single_example.__name__ = fn.__name__
+            run_single_example.__doc__ = fn.__doc__
+            return run_single_example
+
+        return deco

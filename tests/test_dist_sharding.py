@@ -1,0 +1,209 @@
+"""Unit tests for the repro.dist.sharding contract itself.
+
+test_distribution.py validates the layer end-to-end (16-device subprocess
+lowering with sharded collectives); here we pin the pure semantics: rule
+mapping, ambient-scope nesting, leaf predicate edges, single-device degrade,
+and the elastic downsize policy helper.
+"""
+
+import types
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.dist.sharding import (MULTI_POD_RULES, SINGLE_POD_RULES, AxisRules,
+                                 axes_to_spec, current_rules, is_axes,
+                                 make_compat_mesh, param_shardings, shard,
+                                 use_rules, with_overrides)
+from repro.ft.elastic import downsize_batch_rules
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# --------------------------------------------------------------------------
+# rule mapping
+# --------------------------------------------------------------------------
+
+def test_multi_pod_batch_shards_over_pod_and_data():
+    spec = axes_to_spec(("batch", "fsdp", "tp"), MULTI_POD_RULES)
+    assert tuple(spec) == (("pod", "data"), "data", "model")
+
+
+def test_unknown_logical_axis_is_replicated():
+    # "cache_seq" is deliberately absent from the rule dicts: model code may
+    # annotate axes that only some topologies shard
+    spec = axes_to_spec(("batch", "cache_seq", "no_such_axis"),
+                        SINGLE_POD_RULES)
+    assert tuple(spec) == ("data", None, None)
+
+
+def test_with_overrides_does_not_mutate_input():
+    base = SINGLE_POD_RULES
+    before = dict(base.rules)
+    derived = with_overrides(base, batch=None, act_seq="model")
+    assert dict(base.rules) == before
+    assert derived.rules["batch"] is None
+    assert derived.rules["act_seq"] == "model"
+    assert derived.rules["tp"] == "model"  # untouched keys inherited
+    assert derived.mesh is base.mesh
+
+
+# --------------------------------------------------------------------------
+# is_axes leaf predicate
+# --------------------------------------------------------------------------
+
+def test_is_axes_accepts_plain_axes_tuples():
+    assert is_axes(())
+    assert is_axes((None,))
+    assert is_axes(("batch", None, "tp"))
+
+
+def test_is_axes_rejects_non_axes():
+    class NT(types.SimpleNamespace):
+        pass
+
+    from repro.models.ssm import SSMCache
+    assert not is_axes(SSMCache(("a",), ("b",), ("c",), ("d",)))  # NamedTuple
+    assert not is_axes(("batch", 3))          # non-str member
+    assert not is_axes((("batch",),))         # nested tuple
+    assert not is_axes(({"k": 1},))           # dict member
+    assert not is_axes(["batch"])             # list, not tuple
+    assert not is_axes("batch")               # bare string
+    assert not is_axes(NT())
+
+
+# --------------------------------------------------------------------------
+# ambient rules: nesting / re-entrancy
+# --------------------------------------------------------------------------
+
+def test_use_rules_nesting_restores_outer():
+    assert current_rules() is None
+    outer = SINGLE_POD_RULES
+    inner = with_overrides(outer, batch=None)
+    with use_rules(outer):
+        assert current_rules() is outer
+        with use_rules(inner):
+            assert current_rules() is inner
+        assert current_rules() is outer
+    assert current_rules() is None
+
+
+def test_use_rules_restores_on_exception():
+    with pytest.raises(RuntimeError):
+        with use_rules(SINGLE_POD_RULES):
+            raise RuntimeError("boom")
+    assert current_rules() is None
+
+
+def test_use_rules_instance_is_reusable():
+    # launch/train.py constructs the context eagerly and enters it later;
+    # sequential re-entry of the same instance must also work
+    ctx = use_rules(SINGLE_POD_RULES)
+    for _ in range(2):
+        with ctx:
+            assert current_rules() is SINGLE_POD_RULES
+        assert current_rules() is None
+
+
+# --------------------------------------------------------------------------
+# shard: single-device degrade
+# --------------------------------------------------------------------------
+
+def test_shard_identity_outside_any_scope():
+    x = jnp.ones((4, 4))
+    assert shard(x, "batch", "tp") is x
+
+
+def test_shard_identity_with_meshless_rules():
+    x = jnp.ones((4, 4))
+    with use_rules(SINGLE_POD_RULES):  # mesh=None constant
+        assert shard(x, "batch", "tp") is x
+
+
+def test_shard_identity_on_one_device_mesh():
+    mesh = make_compat_mesh((1, 1), ("data", "model"),
+                            devices=jax.devices("cpu")[:1])
+    rules = AxisRules(rules=dict(SINGLE_POD_RULES.rules), mesh=mesh)
+    x = jnp.ones((4, 4))
+    with use_rules(rules):
+        assert shard(x, "batch", "tp") is x
+
+
+# --------------------------------------------------------------------------
+# param_shardings
+# --------------------------------------------------------------------------
+
+def test_param_shardings_requires_mesh():
+    with pytest.raises(ValueError, match="mesh-bound"):
+        param_shardings({"w": ("fsdp", "tp")}, SINGLE_POD_RULES)
+
+
+def test_param_shardings_maps_leaves_through_containers():
+    from repro.models.ssm import SSMCache
+    mesh = make_compat_mesh((1, 1), ("data", "model"),
+                            devices=jax.devices("cpu")[:1])
+    rules = AxisRules(rules=dict(SINGLE_POD_RULES.rules), mesh=mesh)
+    tree = {
+        "w": ("fsdp", "tp"),
+        "scalar": (),
+        "cache": SSMCache(("batch", "tp"), ("batch", None), (None,), ()),
+    }
+    out = param_shardings(tree, rules)
+    assert tuple(out["w"].spec) == ("data", "model")
+    assert tuple(out["scalar"].spec) == ()
+    assert isinstance(out["cache"], SSMCache)  # container preserved
+    assert tuple(out["cache"].state.spec) == ("data", "model")
+    assert all(s.mesh is mesh for s in jax.tree.leaves(out))
+
+
+# --------------------------------------------------------------------------
+# elastic downsize policy
+# --------------------------------------------------------------------------
+
+def _mesh_stub(data=8, pod=None):
+    # downsize_batch_rules only reads mesh.shape; a stub keeps the test off
+    # the (process-global, single-device) jax backend
+    shape = {"data": data, "model": 16}
+    if pod is not None:
+        shape["pod"] = pod
+    return types.SimpleNamespace(shape=shape)
+
+
+def test_downsize_valid_eviction_detaches_mesh():
+    rules = AxisRules(rules=dict(SINGLE_POD_RULES.rules), mesh=_mesh_stub(8))
+    out = downsize_batch_rules(rules, lost_hosts=4, hosts_per_data_shard=2)
+    assert out.mesh is None
+    assert dict(out.rules) == dict(SINGLE_POD_RULES.rules)
+    assert rules.mesh is not None  # input untouched
+
+
+def test_downsize_rejects_misaligned_eviction():
+    rules = AxisRules(rules=dict(SINGLE_POD_RULES.rules), mesh=_mesh_stub(8))
+    with pytest.raises(ValueError, match="shard-aligned"):
+        downsize_batch_rules(rules, lost_hosts=3, hosts_per_data_shard=2)
+
+
+def test_downsize_rejects_emptying_batch_pool():
+    rules = AxisRules(rules=dict(SINGLE_POD_RULES.rules), mesh=_mesh_stub(4))
+    with pytest.raises(ValueError, match="empties the batch-shard pool"):
+        downsize_batch_rules(rules, lost_hosts=4)
+
+
+def test_downsize_multi_pod_counts_full_batch_pool():
+    # pod=2 x data=16 = 32 batch shards: losing a whole pod's 16 shards is
+    # a valid downsize, not an axis-emptying one
+    rules = AxisRules(rules=dict(MULTI_POD_RULES.rules),
+                      mesh=_mesh_stub(data=16, pod=2))
+    out = downsize_batch_rules(rules, lost_hosts=16)
+    assert out.mesh is None
+    with pytest.raises(ValueError, match="empties the batch-shard pool"):
+        downsize_batch_rules(rules, lost_hosts=32)
+
+
+def test_downsize_rejects_nonpositive_and_meshless():
+    rules = AxisRules(rules=dict(SINGLE_POD_RULES.rules), mesh=_mesh_stub(4))
+    with pytest.raises(ValueError, match="positive"):
+        downsize_batch_rules(rules, lost_hosts=0)
+    with pytest.raises(ValueError, match="bound to the pre-eviction mesh"):
+        downsize_batch_rules(SINGLE_POD_RULES, lost_hosts=1)

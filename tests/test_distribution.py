@@ -87,14 +87,12 @@ _SUBPROC = textwrap.dedent("""
     import os, json
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
     import sys; sys.path.insert(0, "src")
-    import jax
-    from jax.sharding import AxisType
     from repro.configs import get_smoke
     from repro.configs.base import ShapeCell
+    from repro.dist.sharding import make_compat_mesh
     from repro.launch.dryrun import lower_cell
 
-    mesh = jax.make_mesh((4, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_compat_mesh((4, 4), ("data", "model"))
     out = {}
     for name in %(archs)s:
         cfg = get_smoke(name)

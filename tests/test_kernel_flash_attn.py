@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels.flash_attn.ops import flash_attention
 from repro.kernels.flash_attn.ref import ref_attention
