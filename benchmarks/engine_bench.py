@@ -1,0 +1,69 @@
+"""Engine throughput trajectory: samples/s for the three MRF training
+backends (float / qat-int8 / fused-pallas) through the unified engine, on the
+paper's adapted net.
+
+Besides the CSV rows the run.py harness prints, writes machine-readable
+``BENCH_train_engine.json`` so successive PRs can track the perf trajectory
+(the file is regenerated in place; commit it to record a data point).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import tempfile
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import make_batch_factory
+from repro.ft.runner import RunnerConfig
+from repro.models import registry
+from repro.train import engine
+
+OUT_PATH = pathlib.Path("BENCH_train_engine.json")
+
+BACKEND_CFGS = {
+    "float": dict(optimizer="adam", lr=1e-3),
+    "qat-int8": dict(optimizer="adam", lr=1e-3),
+    "fused-pallas": dict(optimizer="sgd", lr=2e-2, tile_batch=128),
+}
+
+
+def _bench_backend(fns, backend: str, steps: int, batch: int,
+                   warmup: int) -> dict:
+    stream = engine.default_stream(fns.cfg, batch)
+    ecfg = engine.EngineConfig(backend=backend, max_grad_norm=None,
+                               **BACKEND_CFGS[backend])
+    dts = []  # per-step wall times from the runner; head includes compile
+    with tempfile.TemporaryDirectory(prefix="engine_bench_") as ckpt:
+        rcfg = RunnerConfig(total_steps=steps + warmup, ckpt_dir=ckpt,
+                            ckpt_every=steps + warmup + 1)
+        _, _, info = engine.train(
+            fns, ecfg, rcfg,
+            batches=make_batch_factory(stream, jax.random.PRNGKey(1)),
+            batch_size=batch,
+            on_metrics=lambda step, metrics, dt: dts.append(dt))
+    steady = dts[warmup:]
+    per_step = sum(steady) / len(steady)
+    return {"samples_per_s": batch / per_step,
+            "us_per_step": per_step * 1e6,
+            "wall_seconds": info["wall_seconds"], "steps": steps}
+
+
+def run(steps: int = 20, batch: int = 256, out_path=OUT_PATH):
+    """run.py suite entry: yields (name, us_per_call, derived) rows and
+    writes the JSON trajectory file."""
+    cfg = get_config("mrf-fpga")
+    fns = registry.build(cfg)
+    record = {"suite": "train_engine", "arch": cfg.name, "batch": batch,
+              "n_frames": cfg.mrf_n_frames, "backends": {}}
+    rows = []
+    for backend in ("float", "qat-int8", "fused-pallas"):
+        r = _bench_backend(fns, backend, steps=steps, batch=batch, warmup=2)
+        record["backends"][backend] = r
+        rows.append((f"engine/{backend}", r["us_per_step"],
+                     f"samples/s={r['samples_per_s']:.0f}"))
+    pathlib.Path(out_path).write_text(json.dumps(record, indent=1))
+    rows.append(("engine/json", 0.0, f"wrote {out_path}"))
+    return rows

@@ -4,29 +4,34 @@
 #   table_resources  — paper §3 FPGA resource estimates
 #   kernel_bench     — Pallas kernel micro-benchmarks vs oracles
 #   roofline_report  — §Roofline summary from the dry-run records
+#   engine_bench     — samples/s for the three MRF training backends
+#                      (writes BENCH_train_engine.json, the perf trajectory)
 from __future__ import annotations
 
 import argparse
-import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,eq3,resources,kernels,roofline")
+                    help="comma list: table1,eq3,resources,kernels,roofline,"
+                         "engine")
     ap.add_argument("--steps", type=int, default=800,
                     help="training steps for table1 (scaled schedule)")
+    ap.add_argument("--engine-steps", type=int, default=20,
+                    help="timed steps per backend for the engine suite")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (kernel_bench, roofline_report, table1_metrics,
-                            table_eq3_timing, table_resources)
+    from benchmarks import (engine_bench, kernel_bench, roofline_report,
+                            table1_metrics, table_eq3_timing, table_resources)
 
     suites = [
         ("eq3", table_eq3_timing.run, {}),
         ("resources", table_resources.run, {}),
         ("kernels", kernel_bench.run, {}),
         ("roofline", roofline_report.run, {}),
+        ("engine", engine_bench.run, {"steps": args.engine_steps}),
         ("table1", table1_metrics.run, {"steps": args.steps}),
     ]
     print("name,us_per_call,derived")

@@ -12,8 +12,6 @@ from __future__ import annotations
 
 import time
 
-import jax
-
 from repro.core import mrf_net, qat
 from repro.core.train_loop import TrainConfig, evaluate, train
 from repro.data.epg import default_sequence

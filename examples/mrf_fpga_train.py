@@ -3,22 +3,28 @@ the MRF reconstruction net with the fused Pallas kernel (weights resident in
 VMEM, samples streaming through), in both the paper-faithful per-sample SGD
 mode and the MXU-native minibatch mode — then the Eq. 3 cost-model comparison.
 
+The loop itself is the unified engine (repro.train.engine -> ft.runner): the
+same checkpointed, fault-tolerant runner the LM zoo trains under, with the
+``fused-pallas`` backend selected.
+
 Run:  PYTHONPATH=src python examples/mrf_fpga_train.py [--steps 300]
 """
 
 import argparse
-import time
+import tempfile
 
 import jax
 import jax.numpy as jnp
 
+from repro.configs import get_config
 from repro.core import fpga_cost_model as fcm
 from repro.core import mrf_net
 from repro.core.metrics import table1_metrics
-from repro.data.epg import default_sequence
-from repro.data.pipeline import (MRFSampleStream, T1_RANGE_MS, T2_RANGE_MS,
-                                 make_eval_set, sample_batch)
-from repro.kernels.fused_train import ops as ft_ops
+from repro.data.pipeline import (T1_RANGE_MS, T2_RANGE_MS, make_batch_factory,
+                                 make_eval_set)
+from repro.ft.runner import RunnerConfig
+from repro.models import registry
+from repro.train import engine
 
 
 def main():
@@ -32,27 +38,34 @@ def main():
                          "CPU interpret mode); minibatch = MXU-native")
     args = ap.parse_args()
 
-    seq = default_sequence(32)
-    stream = MRFSampleStream(seq=seq, batch_size=args.batch)
-    sizes = mrf_net.layer_sizes(32)
-    params = mrf_net.init_params(jax.random.PRNGKey(0), sizes)
+    cfg = get_config("mrf-fpga")
+    fns = registry.build(cfg)
+    sizes = mrf_net.layer_sizes(cfg.mrf_n_frames, cfg.mrf_hidden)
+    stream = engine.default_stream(cfg, args.batch)
     tile = 1 if args.mode == "stream" else 128
 
     print(f"fused on-accelerator training: {args.mode} mode, "
           f"{args.steps} x {args.batch} samples, net {sizes}")
-    key = jax.random.PRNGKey(1)
-    t0 = time.perf_counter()
-    for step in range(args.steps):
-        x, y = sample_batch(stream, jax.random.fold_in(key, step))
-        params, losses = ft_ops.fused_train_step(params, x, y, lr=args.lr,
-                                                 tile_batch=tile)
-        if step % 50 == 0 or step == args.steps - 1:
-            print(f"  step {step:4d}  loss {float(losses[-1]):.6f}")
-    wall = time.perf_counter() - t0
+    ecfg = engine.EngineConfig(backend="fused-pallas", lr=args.lr,
+                               optimizer="sgd", tile_batch=tile)
+
+    def log(step, metrics, dt):
+        if (step - 1) % 50 == 0 or step == args.steps:
+            print(f"  step {step - 1:4d}  loss {float(metrics['loss']):.6f}")
+
+    with tempfile.TemporaryDirectory(prefix="mrf_fused_") as ckpt_dir:
+        rcfg = RunnerConfig(total_steps=args.steps, ckpt_dir=ckpt_dir,
+                            ckpt_every=max(args.steps // 3, 1))
+        state, _, info = engine.train(
+            fns, ecfg, rcfg,
+            batches=make_batch_factory(stream, jax.random.PRNGKey(1)),
+            init_key=jax.random.PRNGKey(0), batch_size=args.batch,
+            on_metrics=log)
+    wall = info["wall_seconds"]
     n_samples = args.steps * args.batch
 
-    x, y = make_eval_set(seq, n=2000)
-    pred = mrf_net.forward(params, x)
+    x, y = make_eval_set(stream.seq, n=2000)
+    pred = mrf_net.forward(state.params, x)
     scale = jnp.array([T1_RANGE_MS[1], T2_RANGE_MS[1]])
     m = table1_metrics(pred * scale, y * scale)
     for p in ("T1", "T2"):

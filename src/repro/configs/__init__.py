@@ -1,7 +1,8 @@
 """Assigned architecture configs (one module per arch) + registry."""
 from repro.configs import (deepseek_moe_16b, granite_8b, hymba_1_5b,
                            llava_next_34b, mamba2_1_3b, minitron_8b,
-                           phi35_moe_42b, qwen2_5_14b, seamless_m4t_large_v2,
+                           mrf_fpga, mrf_original, phi35_moe_42b,
+                           qwen2_5_14b, seamless_m4t_large_v2,
                            tinyllama_1_1b)
 from repro.configs.base import (ALL_CELLS, DECODE_32K, LONG_500K, PREFILL_32K,
                                 TRAIN_4K, ModelConfig, ShapeCell, cells_for)
@@ -11,8 +12,14 @@ ARCHS = {
         phi35_moe_42b, deepseek_moe_16b, mamba2_1_3b, minitron_8b,
         tinyllama_1_1b, granite_8b, qwen2_5_14b, llava_next_34b,
         hymba_1_5b, seamless_m4t_large_v2,
+        mrf_fpga, mrf_original,  # the paper's nets, same engine as the zoo
     )
 }
+
+def lm_archs() -> list[str]:
+    """Arch ids with the LM train/prefill/decode surface (shape-cell sweeps,
+    dry-runs); excludes the feed-forward MRF reconstruction nets."""
+    return sorted(n for n, m in ARCHS.items() if m.CONFIG.family != "mrf")
 
 def get_config(name: str) -> ModelConfig:
     return ARCHS[name].CONFIG

@@ -12,7 +12,7 @@ import dataclasses
 import math
 from typing import Literal
 
-Family = Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+Family = Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm", "mrf"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +43,9 @@ class ModelConfig:
     n_enc_layers: int = 0     # 0 = decoder-only
     # --- multimodal stub frontend ---
     n_prefix_embeds: int = 0  # precomputed patch/frame embeddings (vlm/audio)
+    # --- MRF reconstruction nets (family == "mrf") ---
+    mrf_n_frames: int = 0     # fingerprint frames; input dim = 2 * frames
+    mrf_hidden: tuple = ()    # hidden widths ((T1, T2) head appended)
     # --- misc ---
     qkv_bias: bool = False
     gated_mlp: bool = True    # SwiGLU (llama-family); False -> GELU MLP
@@ -106,6 +109,9 @@ class ModelConfig:
         return math.ceil(self.vocab_size / tp) * tp
 
     def validate(self):
+        if self.family == "mrf":
+            assert self.mrf_n_frames > 0 and self.mrf_hidden, self.name
+            return self
         if self.n_heads:
             assert self.head_dim * self.n_heads >= self.d_model or self.d_head, self.name
         if self.family == "moe":
@@ -143,6 +149,9 @@ def cells_for(cfg: ModelConfig) -> list[ShapeCell]:
 
 def param_count(cfg: ModelConfig) -> int:
     """Analytic parameter count (exact for our implementation, tp=1)."""
+    if cfg.family == "mrf":
+        sizes = (2 * cfg.mrf_n_frames, *cfg.mrf_hidden, 2)
+        return sum(i * o + o for i, o in zip(sizes[:-1], sizes[1:]))
     d, L = cfg.d_model, cfg.n_layers
     total = cfg.vocab_size * d * 2  # embed + head (untied)
     per_layer = 2 * d  # two RMSNorm gains

@@ -1,8 +1,22 @@
 """The paper's own model: the FPGA-adapted MRF reconstruction MLP
-(see repro.core.mrf_net).  Not part of the LM zoo; exposed here so the
-launcher can --arch mrf-fpga for the end-to-end MRF example."""
+(see repro.core.mrf_net), registered as a first-class arch so
+``--arch mrf-fpga`` runs through the same engine as the LM zoo."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
 from repro.core import mrf_net
 
 N_FRAMES = 32
 SIZES = mrf_net.layer_sizes(N_FRAMES, mrf_net.ADAPTED_HIDDEN)
-ORIGINAL_SIZES = mrf_net.layer_sizes(N_FRAMES, mrf_net.ORIGINAL_HIDDEN)
+
+CONFIG = ModelConfig(
+    name="mrf-fpga", family="mrf",
+    n_layers=len(mrf_net.ADAPTED_HIDDEN) + 1,
+    d_model=0, n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=0,
+    mrf_n_frames=N_FRAMES, mrf_hidden=mrf_net.ADAPTED_HIDDEN,
+).validate()
+
+
+def smoke() -> ModelConfig:
+    """CPU-runnable reduction: fewer fingerprint frames, same topology."""
+    return dataclasses.replace(CONFIG, mrf_n_frames=16)

@@ -1,0 +1,19 @@
+"""The Barbieri-et-al original 9-layer MRF reconstruction MLP (the software
+baseline the paper adapts down to the FPGA budget) — the ``original`` row of
+Table 1, trained through the same engine as ``mrf-fpga``."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.configs.mrf_fpga import N_FRAMES
+from repro.core import mrf_net
+
+CONFIG = ModelConfig(
+    name="mrf-original", family="mrf",
+    n_layers=len(mrf_net.ORIGINAL_HIDDEN) + 1,
+    d_model=0, n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=0,
+    mrf_n_frames=N_FRAMES, mrf_hidden=mrf_net.ORIGINAL_HIDDEN,
+).validate()
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(CONFIG, mrf_n_frames=16)

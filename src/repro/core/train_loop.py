@@ -1,26 +1,30 @@
-"""Training loops for the MRF net: the float baseline (Adam, the paper's
-software setup) and the QAT loop (fake-quant, Adam), plus the evaluation the
-paper runs (5000 held-out synthetic signals -> Table 1 metrics).
+"""Software-reference training entry points for the MRF net.
 
-The *fused on-accelerator* training path (the paper's actual contribution)
-lives in kernels/fused_train and is exercised by examples/mrf_fpga_train.py;
-this module is the software reference those paths are validated against.
+``train()`` is now a thin wrapper over the unified engine
+(``repro.train.engine``): the float baseline (Adam, the paper's software
+setup), the QAT loop (fake-quant + observers), and the fused on-accelerator
+kernel are all the same ``ft.runner`` run with a different backend — which
+buys checkpoint/restart, the straggler watchdog, and seekable deterministic
+data replay for free while reproducing the original hand-rolled loops
+bit-for-bit (same init split, same per-step batch keys, same un-clipped
+Adam/SGD updates).
+
+``evaluate()`` is the paper's test: 5000 held-out synthetic signals ->
+Table 1 metrics.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
-from functools import partial
-from typing import Callable
+import tempfile
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import mrf_net, qat
 from repro.core.metrics import table1_metrics
-from repro.data.pipeline import MRFSampleStream, T1_RANGE_MS, T2_RANGE_MS, make_eval_set, sample_batch
-from repro.optim import adam, sgd
+from repro.data.pipeline import (MRFSampleStream, T1_RANGE_MS, T2_RANGE_MS,
+                                 make_batch_factory, make_eval_set)
 
 
 @dataclasses.dataclass
@@ -34,59 +38,81 @@ class TrainConfig:
     optimizer: str = "adam"     # paper: Adam for software, SGD on FPGA
     seed: int = 0
     log_every: int = 100
+    backend: str = ""           # "" -> float, or qat-int8 when qat=True;
+                                # may name any repro.train.engine backend
+    ckpt_dir: str | None = None  # None -> throwaway temp dir
+    ckpt_every: int = 0         # 0 -> no periodic checkpoints
+    tile_batch: int = 128       # fused-pallas only
 
 
-def make_train_step(cfg: TrainConfig, opt):
-    if cfg.qat:
-        def loss_fn(params, qstate, x, y):
-            pred, new_qstate = qat.forward_qat(params, qstate, x, train=True)
-            return jnp.mean(jnp.square(pred - y)), new_qstate
-
-        @jax.jit
-        def step(params, qstate, opt_state, x, y):
-            (loss, new_qstate), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, qstate, x, y)
-            params, opt_state = opt.update(grads, opt_state, params)
-            return params, new_qstate, opt_state, loss
-        return step
-
-    def loss_fn(params, x, y):
-        return mrf_net.mse_loss(params, x, y)
-
-    @jax.jit
-    def step(params, qstate, opt_state, x, y):
-        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return params, qstate, opt_state, loss
-    return step
-
-
-def train(cfg: TrainConfig, stream: MRFSampleStream | None = None, verbose: bool = True):
-    """Train an MRF net; returns (params, qstate, history)."""
+def train(cfg: TrainConfig, stream: MRFSampleStream | None = None,
+          verbose: bool = True):
+    """Train an MRF net through the unified engine; returns
+    (params, qstate, history) — the historical wrapper signature."""
+    from repro.configs.base import ModelConfig
     from repro.data.epg import default_sequence
+    from repro.ft.runner import RunnerConfig
+    from repro.models.mrf import build_mrf
+    from repro.train import engine
 
     if stream is None:
-        stream = MRFSampleStream(seq=default_sequence(cfg.n_frames), batch_size=cfg.batch_size)
-    sizes = mrf_net.layer_sizes(stream.seq.n_frames, cfg.hidden)
+        stream = MRFSampleStream(seq=default_sequence(cfg.n_frames),
+                                 batch_size=cfg.batch_size)
+    n_frames = stream.seq.n_frames
+    sizes = mrf_net.layer_sizes(n_frames, cfg.hidden)
+    # Exact key discipline of the original loop: one split for init, the
+    # remaining key folded with the step index for each batch.
     key = jax.random.PRNGKey(cfg.seed)
     key, k_init = jax.random.split(key)
-    params = mrf_net.init_params(k_init, sizes)
-    qstate = qat.init_qat_state(len(params))
-    opt = adam(cfg.lr) if cfg.optimizer == "adam" else sgd(cfg.lr)
-    opt_state = opt.init(params)
-    step_fn = make_train_step(cfg, opt)
+
+    backend = cfg.backend or ("qat-int8" if cfg.qat else "float")
+    model_cfg = ModelConfig(
+        name=f"mrf-{n_frames}f", family="mrf",
+        n_layers=len(cfg.hidden) + 1, d_model=0, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab_size=0, mrf_n_frames=n_frames,
+        mrf_hidden=tuple(cfg.hidden)).validate()
+    fns = build_mrf(model_cfg)
+    ecfg = engine.EngineConfig(backend=backend, lr=cfg.lr,
+                               optimizer=cfg.optimizer, max_grad_norm=None,
+                               tile_batch=cfg.tile_batch)
 
     history = []
-    t0 = time.perf_counter()
-    for i in range(cfg.steps):
-        x, y = sample_batch(stream, jax.random.fold_in(key, i))
-        params, qstate, opt_state, loss = step_fn(params, qstate, opt_state, x, y)
+
+    def on_metrics(step, metrics, dt):
+        i = step - 1
         if i % cfg.log_every == 0 or i == cfg.steps - 1:
-            history.append((i, float(loss)))
+            history.append((i, float(metrics["loss"])))
             if verbose:
-                print(f"step {i:5d}  loss {float(loss):.6f}")
-    wall = time.perf_counter() - t0
-    return params, qstate, {"history": history, "wall_seconds": wall, "sizes": sizes}
+                print(f"step {i:5d}  loss {float(metrics['loss']):.6f}")
+
+    tmp = None
+    ckpt_dir = cfg.ckpt_dir
+    if ckpt_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="mrf_engine_")
+        ckpt_dir = tmp.name
+    else:
+        from repro.ft.checkpoint import latest_step
+        resume = latest_step(ckpt_dir)
+        if resume:
+            # a persistent ckpt_dir means restartability: say so out loud,
+            # since history/wall_seconds then cover only the resumed tail
+            print(f"resuming from checkpoint step {resume} in {ckpt_dir}")
+    try:
+        rcfg = RunnerConfig(total_steps=cfg.steps, ckpt_dir=ckpt_dir,
+                            ckpt_every=cfg.ckpt_every or cfg.steps + 1)
+        state, _, info = engine.train(
+            fns, ecfg, rcfg, batches=make_batch_factory(stream, key),
+            init_key=k_init, batch_size=stream.batch_size,
+            on_metrics=on_metrics)
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+
+    qstate = state.aux if state.aux is not None else qat.init_qat_state(
+        len(state.params))
+    return state.params, qstate, {"history": history,
+                                  "wall_seconds": info["wall_seconds"],
+                                  "sizes": sizes}
 
 
 def evaluate(params, seq, *, qstate=None, int_layers=None, n: int = 5000, seed: int = 123):

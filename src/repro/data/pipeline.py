@@ -16,12 +16,12 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Iterator
+from typing import Callable, Iterator
 
 import jax
 import jax.numpy as jnp
 
-from repro.data.epg import MRFSequence, augment, default_sequence, to_features
+from repro.data.epg import MRFSequence, augment, to_features
 
 # Physiological brain ranges used by the Barbieri-family MRF papers (ms).
 T1_RANGE_MS = (100.0, 4000.0)
@@ -75,6 +75,26 @@ def make_batch_iterator(stream: MRFSampleStream, seed: int = 0,
     while True:
         yield sample_batch(stream, jax.random.fold_in(key, step))
         step += 1
+
+
+def make_batch_factory(stream: MRFSampleStream,
+                       key: jax.Array) -> Callable[[int], dict]:
+    """Seekable deterministic batch factory — the ``ft.runner`` data contract.
+
+    ``factory(step)`` returns the SAME ``{"x", "y"}`` batch for the same step
+    every time it is called (the batch key is ``fold_in(key, step)``), so a
+    checkpoint-restart replays the stream exactly from the resume step.
+    """
+    def at(step: int) -> dict:
+        x, y = sample_batch(stream, jax.random.fold_in(key, step))
+        return {"x": x, "y": y}
+    return at
+
+
+def host_sharded_key(seed: int = 0, process_index: int | None = None) -> jax.Array:
+    """Per-host stream key: host i draws i.i.d. batches without coordination."""
+    pidx = jax.process_index() if process_index is None else process_index
+    return jax.random.fold_in(jax.random.PRNGKey(seed), pidx)
 
 
 def make_eval_set(seq: MRFSequence, n: int = 5000, seed: int = 123, snr: float = 20.0):

@@ -36,7 +36,7 @@ nonexistent on 0.4.x); all mesh construction in this repo routes through it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterator, Mapping, Sequence
+from typing import Any, Mapping, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Iterator
+from typing import Any, Callable
 
 import jax
 
@@ -34,12 +34,15 @@ class RunnerConfig:
     inject_fault_at: int | None = None
 
 
-def run(train_step: Callable, init_state, batches: Iterator,
+def run(train_step: Callable, init_state, batches: Callable[[int], Any],
         cfg: RunnerConfig, *, shardings=None, on_metrics=None):
-    """Run to cfg.total_steps with checkpoint/restart. Returns final state.
+    """Run to cfg.total_steps with checkpoint/restart.
 
-    ``batches`` must be a *seekable* factory: callable(step) -> batch, so a
-    restart replays the data stream deterministically from the resume step.
+    Returns ``(state, step)``: the final state and the step count reached.
+
+    ``batches`` is a *seekable* factory — ``batches(step) -> batch`` must
+    return the same batch for the same step on every call, so a restart
+    replays the data stream deterministically from the resume step.
     """
     mgr = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep, every=cfg.ckpt_every)
     monitor = StragglerMonitor()

@@ -10,9 +10,6 @@ equals the unpadded math (asserted against ref.py in the tests).
 
 from __future__ import annotations
 
-from functools import partial
-
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.fused_train.kernel import PAD, fused_train_call
@@ -54,3 +51,36 @@ def fused_train_step(params, x, y, *, lr: float, tile_batch: int = 128,
         x_pad, y_pad, w_pad, b_pad, n_layers=len(params), out_dim=out_dim,
         lr=lr, tile_batch=tile_batch, qat=qat, interpret=interpret)
     return unpad_params(w_new, b_new, params), losses
+
+
+def effective_tile(batch: int, tile_batch: int) -> int:
+    """Largest tile <= tile_batch that divides ``batch`` (kernel grid
+    constraint); degrades toward per-sample streaming rather than crashing
+    on awkward batch sizes."""
+    t = min(tile_batch, batch)
+    while batch % t:
+        t -= 1
+    return t
+
+
+def make_engine_step(*, lr: float, tile_batch: int = 128, qat: bool = False,
+                     interpret: bool = True):
+    """The ``fused_step`` backend for ``repro.train.step.make_train_step``.
+
+    Conforms the kernel to the engine contract
+    ``(params, aux, batch) -> (new_params, new_aux, metrics)``: the whole
+    grads+SGD-update pipeline runs inside the kernel, so there is no grad
+    pytree and no optimizer state to touch — aux passes through untouched and
+    the metrics carry the mean over per-tile losses (each tile sees params
+    already updated by its predecessors, the paper's sequential-SGD regime).
+
+    ``tile_batch`` is a ceiling: the actual tile is the largest divisor of
+    the (static) batch size not exceeding it.
+    """
+    def fused(params, aux, batch):
+        new_params, losses = fused_train_step(
+            params, batch["x"], batch["y"], lr=lr,
+            tile_batch=effective_tile(batch["x"].shape[0], tile_batch),
+            qat=qat, interpret=interpret)
+        return new_params, aux, {"loss": jnp.mean(losses)}
+    return fused

@@ -23,8 +23,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis.hlo_cost import analyze_hlo
 from repro.analysis.roofline import roofline_terms
-from repro.configs import ARCHS, cells_for, get_config
-from repro.configs.base import ALL_CELLS, ModelConfig, ShapeCell, active_param_count, param_count
+from repro.configs import cells_for, get_config, lm_archs
+from repro.configs.base import ModelConfig, ShapeCell, active_param_count, param_count
 from repro.dist.sharding import use_rules
 from repro.launch import input_specs as specs_mod
 from repro.launch.mesh import make_production_mesh, rules_for
@@ -280,7 +280,7 @@ def main():
     args = ap.parse_args()
 
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
-    archs = args.arch or list(ARCHS)
+    archs = args.arch or lm_archs()  # shape cells are an LM-zoo concept
     results = run_cells(archs, args.shape, meshes, label=args.label,
                         out_dir=pathlib.Path(args.out),
                         microbatches=args.microbatches,

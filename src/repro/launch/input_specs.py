@@ -7,7 +7,6 @@ the full-size configs on the placeholder mesh.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

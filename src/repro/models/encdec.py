@@ -14,7 +14,6 @@ the assigned shape cells; DESIGN.md §4).
 from __future__ import annotations
 
 from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

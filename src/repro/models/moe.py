@@ -19,7 +19,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import dense, normal_init, shard
+from repro.models.common import normal_init, shard
 from repro.models.mlp import MLPParams, init_mlp, mlp_axes, mlp_block
 
 

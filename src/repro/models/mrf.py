@@ -1,0 +1,73 @@
+"""The MRF reconstruction MLPs as ordinary registry architectures.
+
+The DRONE/Barbieri lineage treats the reconstruction net as a plain trainable
+model; this adapter does the same for our stack: ``build_mrf`` wraps
+``core/mrf_net`` into the ``ModelFns`` shape so ``--arch mrf-fpga`` flows
+through the exact launcher -> engine -> ft.runner path the LM zoo uses.
+
+Batches are ``{"x": (B, 2F), "y": (B, 2)}`` dicts from
+``data/pipeline.make_batch_factory``.  Activations are annotated with the
+``batch`` logical axis via ``repro.dist.sharding.shard``, so the same loss
+runs mesh-less on CPU (shard degrades to identity) and data-parallel on a
+mesh.  The net is tiny (<30k params) so params stay replicated (all-``None``
+axes) — sharding them would cost more in collectives than it saves.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import mrf_net, qat
+from repro.dist.sharding import shard
+from repro.models.lm import ModelFns
+
+
+def mrf_sizes(cfg: ModelConfig) -> tuple:
+    return mrf_net.layer_sizes(cfg.mrf_n_frames, cfg.mrf_hidden)
+
+
+def mrf_param_axes(cfg: ModelConfig):
+    sizes = mrf_sizes(cfg)
+    return [{"w": (None, None), "b": (None,)} for _ in range(len(sizes) - 1)]
+
+
+def float_loss(params, batch):
+    x = shard(batch["x"], "batch", None)
+    y = shard(batch["y"], "batch", None)
+    pred = mrf_net.forward(params, x)
+    return jnp.mean(jnp.square(pred - y))
+
+
+def qat_loss(params, qstate, batch):
+    """Aux-carrying QAT loss (``aux_loss=True`` contract of make_train_step):
+    fake-quant forward updates the activation observers functionally."""
+    x = shard(batch["x"], "batch", None)
+    y = shard(batch["y"], "batch", None)
+    pred, new_qstate = qat.forward_qat(params, qstate, x, train=True)
+    return jnp.mean(jnp.square(pred - y)), new_qstate
+
+
+def init_qat_aux(params):
+    return qat.init_qat_state(len(params))
+
+
+def build_mrf(cfg: ModelConfig, tp: int = 1) -> ModelFns:
+    sizes = mrf_sizes(cfg)
+
+    def init(key):
+        return mrf_net.init_params(key, sizes)
+
+    def predict(params, batch):
+        """No KV cache for a feed-forward net: "prefill" is just inference."""
+        return None, mrf_net.forward(params, shard(batch["x"], "batch", None))
+
+    def no_cache(*_a, **_k):
+        raise NotImplementedError(
+            f"{cfg.name} is a feed-forward reconstruction net: no "
+            "decode/cache path (use prefill for inference)")
+
+    return ModelFns(cfg=cfg, tp=tp, init=init,
+                    param_axes=lambda: mrf_param_axes(cfg),
+                    loss=float_loss, prefill=predict, decode=no_cache,
+                    init_cache=no_cache)

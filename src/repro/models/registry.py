@@ -9,12 +9,17 @@ from repro.models.lm import ModelFns, build_lm, lm_cache_axes
 
 
 def build(cfg: ModelConfig, tp: int = 1) -> ModelFns:
+    if cfg.family == "mrf":
+        from repro.models.mrf import build_mrf
+        return build_mrf(cfg, tp)
     if cfg.family == "encdec":
         return build_encdec(cfg, tp)
     return build_lm(cfg, tp)
 
 
 def cache_axes(cfg: ModelConfig):
+    if cfg.family == "mrf":
+        raise NotImplementedError("mrf nets are feed-forward: no decode cache")
     if cfg.family == "encdec":
         return encdec_cache_axes(cfg)
     return lm_cache_axes(cfg)

@@ -89,8 +89,11 @@ def sgd(lr: float = 1e-4, momentum: float = 0.0) -> Optimizer:
     return Optimizer(init=init, update=update)
 
 
+def global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads)))
+
+
 def clip_by_global_norm(grads, max_norm: float):
-    leaves = jax.tree.leaves(grads)
-    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+    gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
     return jax.tree.map(lambda g: g * scale, grads), gnorm

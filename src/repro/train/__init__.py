@@ -1,1 +1,1 @@
-from repro.train.step import TrainState, make_train_step
+from repro.train.step import TrainState, init_train_state, make_train_step

@@ -1,26 +1,40 @@
-"""Distributed training step for the architecture zoo.
+"""Distributed training step for the architecture zoo AND the MRF nets.
 
-Composes: CE loss forward (scanned+remat'd layer stack) -> grads ->
-optional microbatch accumulation (lax.scan over the leading microbatch axis,
-trading one weight all-gather per microbatch for a 1/M activation footprint)
--> grad clip -> optional int8 error-feedback gradient compression (what the
-DCN-crossing pod all-reduce would carry) -> Adam/SGD update.
+Composes: loss forward -> grads -> optional microbatch accumulation
+(lax.scan over the leading microbatch axis, trading one weight all-gather per
+microbatch for a 1/M activation footprint) -> grad clip -> optional int8
+error-feedback gradient compression (what the DCN-crossing pod all-reduce
+would carry) -> Adam/SGD update.
 
-All state (params, optimizer moments, compression residuals) is a pytree
-whose sharding follows the param logical axes, so the optimizer is
+All state (params, optimizer moments, compression residuals, backend aux) is
+a pytree whose sharding follows the param logical axes, so the optimizer is
 ZeRO-partitioned for free under pjit.
+
+Backends
+--------
+``make_train_step`` is the single step factory every training path goes
+through; the backend plugs in at one of two levels:
+
+* ``aux_loss=True``: the loss carries functional auxiliary state
+  (``loss_fn(params, aux, batch) -> (loss, new_aux)``) — e.g. the QAT
+  activation observers.  ``aux`` lives in ``TrainState.aux`` so it rides
+  through checkpoint/restore and buffer donation with everything else.
+* ``fused_step``: a whole-step override
+  (``(params, aux, batch) -> (new_params, new_aux, metrics)``) for updates
+  computed *on the accelerator* (kernels/fused_train), where grads never
+  materialise in HBM.  The factory wraps it into the same
+  ``(state, batch) -> (state, metrics)`` contract.
 """
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.optim import clip_by_global_norm, error_feedback_compress
-from repro.optim.optimizers import Optimizer
+from repro.optim.optimizers import Optimizer, global_norm
 
 
 class TrainState(NamedTuple):
@@ -28,32 +42,55 @@ class TrainState(NamedTuple):
     params: Any
     opt_state: Any
     ef_residual: Any | None  # int8-compression error feedback
+    aux: Any | None = None   # backend state (e.g. QAT observers); checkpointed
 
 
-def init_train_state(params, opt: Optimizer, *, grad_compress: bool = False):
+def init_train_state(params, opt: Optimizer, *, grad_compress: bool = False,
+                     aux=None):
     return TrainState(
         step=jnp.zeros((), jnp.int32),
         params=params,
         opt_state=opt.init(params),
         ef_residual=jax.tree.map(jnp.zeros_like, params) if grad_compress else None,
+        aux=aux,
     )
 
 
 def make_train_step(loss_fn, opt: Optimizer, *, microbatches: int = 1,
-                    max_grad_norm: float = 1.0, grad_compress: bool = False):
+                    max_grad_norm: float | None = 1.0,
+                    grad_compress: bool = False, aux_loss: bool = False,
+                    fused_step=None):
     """Returns train_step(state, batch) -> (state, metrics).
 
     ``batch`` leaves have a leading global-batch dim; with microbatches=M the
     step reshapes to (M, B/M, ...) and accumulates grads sequentially.
+    ``max_grad_norm=None`` disables clipping (gnorm is still reported).
+    With ``aux_loss``, ``loss_fn(params, aux, batch) -> (loss, new_aux)`` and
+    the aux threads through ``state.aux``.  ``fused_step`` replaces the whole
+    grads+apply pipeline (see module docstring); ``loss_fn`` may be None then.
     """
+    if fused_step is not None:
+        def train_step(state: TrainState, batch):
+            new_params, new_aux, metrics = fused_step(state.params, state.aux,
+                                                      batch)
+            new_state = TrainState(step=state.step + 1, params=new_params,
+                                   opt_state=state.opt_state,
+                                   ef_residual=state.ef_residual, aux=new_aux)
+            return new_state, metrics
+        return train_step
 
-    def grads_of(params, batch):
-        return jax.value_and_grad(loss_fn)(params, batch)
+    def grads_of(params, aux, batch):
+        if aux_loss:
+            (loss, new_aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, aux, batch)
+            return loss, grads, new_aux
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, grads, aux
 
     def train_step(state: TrainState, batch):
         params = state.params
         if microbatches == 1:
-            loss, grads = grads_of(params, batch)
+            loss, grads, aux = grads_of(params, state.aux, batch)
         else:
             def resh(x):
                 b = x.shape[0]
@@ -63,23 +100,28 @@ def make_train_step(loss_fn, opt: Optimizer, *, microbatches: int = 1,
             mb = jax.tree.map(resh, batch)
 
             def acc(carry, mb_i):
-                loss_sum, g_sum = carry
-                loss_i, g_i = grads_of(params, mb_i)
+                loss_sum, g_sum, aux_i = carry
+                loss_i, g_i, aux_i = grads_of(params, aux_i, mb_i)
                 return (loss_sum + loss_i,
-                        jax.tree.map(jnp.add, g_sum, g_i)), None
+                        jax.tree.map(jnp.add, g_sum, g_i), aux_i), None
 
             zero = jax.tree.map(jnp.zeros_like, params)
-            (loss, grads), _ = jax.lax.scan(acc, (jnp.float32(0.0), zero), mb)
+            (loss, grads, aux), _ = jax.lax.scan(
+                acc, (jnp.float32(0.0), zero, state.aux), mb)
             loss = loss / microbatches
             grads = jax.tree.map(lambda g: g / microbatches, grads)
 
-        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        if max_grad_norm is None:
+            gnorm = global_norm(grads)
+        else:
+            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
         residual = state.ef_residual
         if grad_compress:
             grads, residual = error_feedback_compress(grads, residual)
         new_params, new_opt = opt.update(grads, state.opt_state, params)
         new_state = TrainState(step=state.step + 1, params=new_params,
-                               opt_state=new_opt, ef_residual=residual)
+                               opt_state=new_opt, ef_residual=residual,
+                               aux=aux)
         return new_state, {"loss": loss, "grad_norm": gnorm}
 
     return train_step

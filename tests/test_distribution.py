@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.analysis.hlo_cost import analyze_hlo
-from repro.dist.sharding import (SINGLE_POD_RULES, AxisRules, axes_to_spec,
+from repro.dist.sharding import (SINGLE_POD_RULES, axes_to_spec,
                                  is_axes, with_overrides)
 
 jax.config.update("jax_platform_name", "cpu")

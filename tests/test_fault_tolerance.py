@@ -5,7 +5,6 @@ watchdog policy, gradient compression error feedback."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke
 from repro.data.lm_text import TextPipeline
@@ -73,6 +72,44 @@ def test_crash_restart_equals_uninterrupted(tmp_path):
     step_fn, state, batches, rcfg = _setup_train(tmp_path / "b", inject=6)
     final_b, _ = run(step_fn, state, batches, rcfg)
     _tree_allclose(final_a.params, final_b.params, atol=1e-6)
+    assert int(final_a.step) == int(final_b.step)
+
+
+def _setup_qat_engine(tmp_path, inject=None, steps=10):
+    """The MRF net through the unified engine with the qat-int8 backend: the
+    QAT observer state rides in TrainState.aux and must checkpoint/restore."""
+    from repro.configs import get_smoke
+    from repro.data.epg import default_sequence
+    from repro.data.pipeline import MRFSampleStream, make_batch_factory
+    from repro.models import registry
+    from repro.train import engine
+
+    cfg = get_smoke("mrf-fpga")
+    fns = registry.build(cfg)
+    step_fn, init_state = engine.build(fns, engine.EngineConfig(
+        backend="qat-int8", lr=1e-3, max_grad_norm=None))
+    stream = MRFSampleStream(seq=default_sequence(cfg.mrf_n_frames),
+                             batch_size=16)
+    batches = make_batch_factory(stream, jax.random.PRNGKey(3))
+    rcfg = RunnerConfig(total_steps=steps, ckpt_dir=str(tmp_path),
+                        ckpt_every=4, inject_fault_at=inject)
+    return step_fn, init_state(jax.random.PRNGKey(0)), batches, rcfg
+
+
+def test_qat_crash_restart_bitmatches_uninterrupted(tmp_path):
+    """A QAT run crashed mid-run must restart from checkpoint — params AND
+    the aux observer state — and bit-match an uninterrupted run."""
+    step_fn, state, batches, rcfg = _setup_qat_engine(tmp_path / "a")
+    final_a, _ = run(step_fn, state, batches, rcfg)
+
+    step_fn, state, batches, rcfg = _setup_qat_engine(tmp_path / "b", inject=6)
+    final_b, _ = run(step_fn, state, batches, rcfg)
+
+    _tree_allclose(final_a.params, final_b.params, atol=0.0)
+    np.testing.assert_array_equal(
+        np.asarray(final_a.aux["act_absmax"]),
+        np.asarray(final_b.aux["act_absmax"]))
+    _tree_allclose(final_a.opt_state, final_b.opt_state, atol=0.0)
     assert int(final_a.step) == int(final_b.step)
 
 
