@@ -1,0 +1,87 @@
+"""MRF serving benchmark: voxels/s throughput + per-request latency
+percentiles for both recon-engine backends (float / int8-Pallas), through
+the same bucketed request pool the production launcher serves.
+
+Writes machine-readable ``BENCH_mrf_serve.json`` (regenerated in place;
+commit it to record a perf data point) besides the CSV rows run.py prints.
+
+Weights need no training for a throughput benchmark: a random net with
+observer calibration passes exercises the identical compute path.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import mrf_net, qat
+from repro.serve.recon import ReconEngine, ReconRequest, latency_percentiles
+
+OUT_PATH = pathlib.Path("BENCH_mrf_serve.json")
+
+# ragged per-request voxel counts: a mix of partial and multi-bucket slices
+REQUEST_VOXELS = (700, 1024, 333, 96, 2048, 1500, 811, 64)
+
+
+def _calibrated_net(cfg, seed: int = 0):
+    sizes = mrf_net.layer_sizes(cfg.mrf_n_frames, cfg.mrf_hidden)
+    params = mrf_net.init_params(jax.random.PRNGKey(seed), sizes)
+    qstate = qat.init_qat_state(len(params))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (256, sizes[0]))
+    for _ in range(4):
+        _, qstate = qat.forward_qat(params, qstate, x)
+    return params, qat.export_int8(params, qstate)
+
+
+def _request_wave(cfg, seed: int = 0):
+    d = 2 * cfg.mrf_n_frames
+    reqs = []
+    for i, n in enumerate(REQUEST_VOXELS):
+        x = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed), i),
+                              (n, d), jnp.float32)
+        reqs.append(ReconRequest(features=x, request_id=f"req-{i}"))
+    return reqs
+
+
+def _bench_backend(engine: ReconEngine, requests, waves: int) -> dict:
+    engine.reconstruct(requests)  # warmup: traces every bucket shape
+    results = []
+    wall = voxels = 0.0
+    for _ in range(waves):
+        results.extend(engine.reconstruct(requests))
+        wall += engine.last_wave["wall_s"]
+        voxels += engine.last_wave["total_voxels"]
+    pct = latency_percentiles(results)
+    return {"voxels_per_s": voxels / max(wall, 1e-12),
+            "latency_ms": pct,
+            "requests": len(results), "voxels": int(voxels),
+            "buckets_traced": engine.compile_cache_size()}
+
+
+def run(waves: int = 5, out_path=OUT_PATH):
+    """run.py suite entry: yields (name, us_per_call, derived) rows and
+    writes the JSON voxels/s + latency-percentile record."""
+    cfg = get_config("mrf-fpga")
+    params, ints = _calibrated_net(cfg)
+    requests = _request_wave(cfg)
+    record = {"suite": "mrf_serve", "arch": cfg.name,
+              "n_frames": cfg.mrf_n_frames,
+              "request_voxels": list(REQUEST_VOXELS), "waves": waves,
+              "backends": {}}
+    rows = []
+    for backend, engine in (
+            ("float", ReconEngine(backend="float", params=params)),
+            ("int8", ReconEngine(backend="int8", int_layers=ints))):
+        r = _bench_backend(engine, requests, waves)
+        record["backends"][backend] = r
+        rows.append((f"mrf_serve/{backend}",
+                     r["latency_ms"]["p50_ms"] * 1e3,
+                     f"voxels/s={r['voxels_per_s']:.0f} "
+                     f"p99={r['latency_ms']['p99_ms']:.1f}ms"))
+    pathlib.Path(out_path).write_text(json.dumps(record, indent=1))
+    rows.append(("mrf_serve/json", 0.0, f"wrote {out_path}"))
+    return rows

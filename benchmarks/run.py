@@ -6,6 +6,8 @@
 #   roofline_report  — §Roofline summary from the dry-run records
 #   engine_bench     — samples/s for the three MRF training backends
 #                      (writes BENCH_train_engine.json, the perf trajectory)
+#   mrf_serve_bench  — recon serving engine: voxels/s + latency percentiles
+#                      for float/int8 backends (writes BENCH_mrf_serve.json)
 from __future__ import annotations
 
 import argparse
@@ -15,16 +17,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,eq3,resources,kernels,roofline,"
-                         "engine")
+                         "engine,mrf_serve")
     ap.add_argument("--steps", type=int, default=800,
                     help="training steps for table1 (scaled schedule)")
     ap.add_argument("--engine-steps", type=int, default=20,
                     help="timed steps per backend for the engine suite")
+    ap.add_argument("--serve-waves", type=int, default=5,
+                    help="timed request waves per backend for mrf_serve")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (engine_bench, kernel_bench, roofline_report,
-                            table1_metrics, table_eq3_timing, table_resources)
+    from benchmarks import (engine_bench, kernel_bench, mrf_serve_bench,
+                            roofline_report, table1_metrics, table_eq3_timing,
+                            table_resources)
 
     suites = [
         ("eq3", table_eq3_timing.run, {}),
@@ -32,6 +37,7 @@ def main() -> None:
         ("kernels", kernel_bench.run, {}),
         ("roofline", roofline_report.run, {}),
         ("engine", engine_bench.run, {"steps": args.engine_steps}),
+        ("mrf_serve", mrf_serve_bench.run, {"waves": args.serve_waves}),
         ("table1", table1_metrics.run, {"steps": args.steps}),
     ]
     print("name,us_per_call,derived")

@@ -14,14 +14,12 @@ import argparse
 import tempfile
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import fpga_cost_model as fcm
 from repro.core import mrf_net
-from repro.core.metrics import table1_metrics
-from repro.data.pipeline import (T1_RANGE_MS, T2_RANGE_MS, make_batch_factory,
-                                 make_eval_set)
+from repro.core.metrics import table1_metrics_normalized
+from repro.data.pipeline import make_batch_factory, make_eval_set
 from repro.ft.runner import RunnerConfig
 from repro.models import registry
 from repro.train import engine
@@ -66,8 +64,7 @@ def main():
 
     x, y = make_eval_set(stream.seq, n=2000)
     pred = mrf_net.forward(state.params, x)
-    scale = jnp.array([T1_RANGE_MS[1], T2_RANGE_MS[1]])
-    m = table1_metrics(pred * scale, y * scale)
+    m = table1_metrics_normalized(pred, y)
     for p in ("T1", "T2"):
         print(f"  {p}: MAPE {m[p]['MAPE_%']:.2f}%  RMSE {m[p]['RMSE_ms']:.0f} ms")
 

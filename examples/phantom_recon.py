@@ -1,40 +1,25 @@
-"""The paper's end use-case: reconstruct T1/T2 *maps* from MRF signals.
+"""The paper's end use-case: reconstruct T1/T2 *maps* from MRF signals —
+as a thin client of the batched serving engine (``repro.serve.recon``).
 
-Builds a synthetic 2D brain phantom (CSF / grey / white matter regions),
-simulates the MRF acquisition per voxel (with noise), trains the adapted QAT
-net, exports it to full-integer form, and reconstructs the parameter maps
-voxel-by-voxel through the **Pallas int8 kernel path** — the deployment
-pipeline the paper targets inside the scanner.
+Trains the adapted QAT net, exports it to the servable full-integer artifact
+(save -> load round-trip, the deployment unit), simulates the phantom
+acquisition, and submits the slice as a request to the int8 engine — the
+same engine ``python -m repro.launch.serve --arch mrf-fpga`` runs in
+production.  Denormalization and map re-assembly live inside the engine
+(``data.pipeline.denormalize_targets``), not here.
 
 Run:  PYTHONPATH=src python examples/phantom_recon.py
 """
 
+import tempfile
+
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import qat
 from repro.core.train_loop import TrainConfig, train
-from repro.data.epg import augment, default_sequence, simulate_fingerprints, to_features
-from repro.data.pipeline import T1_RANGE_MS, T2_RANGE_MS
-from repro.kernels.qat_dense.ops import int_forward_pallas
-
-# tissue classes: (T1 ms, T2 ms) at 3T-ish values
-TISSUES = {"background": (0.0, 0.0), "csf": (3500.0, 450.0),
-           "grey": (1400.0, 110.0), "white": (800.0, 80.0)}
-
-
-def make_phantom(n: int = 32):
-    """Concentric-ellipse phantom; returns (t1_map, t2_map, mask) (n, n)."""
-    yy, xx = np.mgrid[0:n, 0:n]
-    cy = cx = (n - 1) / 2
-    r2 = ((yy - cy) / (n * 0.45)) ** 2 + ((xx - cx) / (n * 0.38)) ** 2
-    t1 = np.zeros((n, n)); t2 = np.zeros((n, n))
-    for name, r_out in (("white", 1.0), ("grey", 0.55), ("csf", 0.18)):
-        m = r2 <= r_out
-        t1[m], t2[m] = TISSUES[name]
-    mask = r2 <= 1.0
-    return t1, t2, mask
+from repro.data.epg import default_sequence
+from repro.data.phantom import acquire_slice, make_phantom, tissue_errors
+from repro.serve.recon import ReconEngine, ReconRequest
 
 
 def main():
@@ -42,36 +27,41 @@ def main():
     cfg = TrainConfig(n_frames=32, steps=600, qat=True, lr=1e-3,
                       batch_size=256, log_every=200)
     params, qstate, _ = train(cfg)
+
+    print("\n=== export -> save -> load the servable int8 artifact ===")
     ints = qat.export_int8(params, qstate)
+    with tempfile.TemporaryDirectory(prefix="mrf_artifact_") as tmp:
+        path = qat.save_int8_artifact(f"{tmp}/mrf_int8", ints)
+        served = qat.load_int8_artifact(path)
+        print(f"  artifact: {path.name}")
 
-    print("\n=== simulate phantom acquisition ===")
-    n = 32
-    t1, t2, mask = make_phantom(n)
-    seq = default_sequence(32)
-    vox = mask.reshape(-1)
-    sig = simulate_fingerprints(seq, jnp.asarray(t1.reshape(-1)[vox]),
-                                jnp.asarray(t2.reshape(-1)[vox]))
-    sig = augment(jax.random.PRNGKey(0), sig, snr_range=(25.0, 25.0))
-    x = to_features(sig)
-    print(f"  {int(vox.sum())} voxels, {x.shape[1]} features each")
+        print("\n=== simulate phantom acquisition ===")
+        n = 32
+        t1_map, t2_map, mask = make_phantom(n)
+        seq = default_sequence(32)
+        feats, msk = acquire_slice(seq, t1_map, t2_map, mask, snr=25.0,
+                                   key=jax.random.PRNGKey(0))
+        print(f"  {int(msk.sum())} voxels, {feats.shape[1]} features each")
 
-    print("\n=== reconstruct maps through the int8 Pallas path ===")
-    pred = np.asarray(int_forward_pallas(ints, x))
-    t1_hat = np.zeros(n * n); t2_hat = np.zeros(n * n)
-    t1_hat[vox] = pred[:, 0] * T1_RANGE_MS[1]
-    t2_hat[vox] = pred[:, 1] * T2_RANGE_MS[1]
-    t1_hat = t1_hat.reshape(n, n); t2_hat = t2_hat.reshape(n, n)
+        print("\n=== reconstruct through the int8 serving engine ===")
+        engine = ReconEngine(backend="int8", int_layers=served)
+        request = ReconRequest(features=feats, mask=msk, request_id="phantom")
+        engine.reconstruct([request])  # warmup wave: compile, don't time
+        result, = engine.reconstruct([request])
+        wave = engine.last_wave
+        print(f"  {wave['voxels_per_s']:.0f} voxels/s  "
+              f"latency {result.latency_s*1e3:.1f} ms")
 
-    for name, (ref1, ref2) in list(TISSUES.items())[1:]:
-        m = (t1 == ref1) & mask
-        e1 = np.mean(np.abs(t1_hat[m] - ref1)) / ref1 * 100
-        e2 = np.mean(np.abs(t2_hat[m] - ref2)) / ref2 * 100
-        print(f"  {name:6s}: T1 err {e1:5.1f}%   T2 err {e2:5.1f}%")
+    for name, e in tissue_errors(result.t1_ms, result.t2_ms,
+                                 t1_map, mask).items():
+        print(f"  {name:6s}: T1 err {e['T1_err_%']:5.1f}%   "
+              f"T2 err {e['T2_err_%']:5.1f}%")
 
     # coarse ASCII render of the T1 map (the paper's Fig-style output)
     print("\nreconstructed T1 map (ms / 100):")
-    for row in t1_hat[::2]:
-        print("  " + "".join(f"{int(v/100):2d}" if v > 50 else " ." for v in row[::2]))
+    for row in result.t1_ms[::2]:
+        print("  " + "".join(f"{int(v/100):2d}" if v > 50 else " ."
+                             for v in row[::2]))
 
 
 if __name__ == "__main__":

@@ -31,3 +31,16 @@ def table1_metrics(pred_ms, true_ms) -> dict:
             "RMSE_ms": float(rmse(p, t)),
         }
     return out
+
+
+def table1_metrics_normalized(pred_norm, true_norm) -> dict:
+    """Table 1 metrics from NORMALISED (T1/T1_max, T2/T2_max) arrays.
+
+    Un-normalisation is delegated to ``data.pipeline.denormalize_targets``
+    (the one owner of the stream ranges) so every caller reports ms on the
+    same scale the stream actually used.
+    """
+    from repro.data.pipeline import denormalize_targets
+
+    return table1_metrics(denormalize_targets(pred_norm),
+                          denormalize_targets(true_norm))

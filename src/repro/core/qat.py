@@ -20,10 +20,12 @@ FPGA-vs-Python exactness check.
 from __future__ import annotations
 
 import dataclasses
+import pathlib
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 INT8_MAX = 127.0
 
@@ -115,6 +117,51 @@ def export_int8(params, qstate, cfg: QATConfig = QATConfig()) -> list:
         layers.append(IntLayer(w_q=w_q, b_q=b_q, s_in=jnp.float32(s_in),
                                s_w=s_w.astype(jnp.float32),
                                s_out=None if last else jnp.float32(s_out)))
+    return layers
+
+
+def save_int8_artifact(path, int_layers: Sequence[IntLayer]) -> pathlib.Path:
+    """Persist a full-integer network as a single servable ``.npz`` artifact.
+
+    The artifact is the deployment unit the serving engine loads: exactly the
+    ``IntLayer`` fields, nothing float-trainable.  Returns the path actually
+    written (``np.savez`` appends ``.npz`` when missing).
+    """
+    path = pathlib.Path(path)
+    if path.suffix != ".npz":
+        path = path.with_suffix(path.suffix + ".npz")
+    arrs = {"n_layers": np.int64(len(int_layers))}
+    for i, layer in enumerate(int_layers):
+        arrs[f"w_q_{i}"] = np.asarray(layer.w_q)
+        arrs[f"b_q_{i}"] = np.asarray(layer.b_q)
+        arrs[f"s_in_{i}"] = np.asarray(layer.s_in)
+        arrs[f"s_w_{i}"] = np.asarray(layer.s_w)
+        if layer.s_out is not None:
+            arrs[f"s_out_{i}"] = np.asarray(layer.s_out)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez(path, **arrs)
+    return path
+
+
+def load_int8_artifact(path) -> list:
+    """Load a ``save_int8_artifact`` file back into ``IntLayer``s.
+
+    Values round-trip bit-exactly (int8/int32 payloads, fp32 scales), so a
+    loaded artifact serves predictions identical to the exporting process —
+    asserted by tests/test_serve_recon.py.
+    """
+    layers = []
+    with np.load(path) as z:
+        n = int(z["n_layers"])
+        for i in range(n):
+            s_out = (jnp.asarray(z[f"s_out_{i}"], jnp.float32)
+                     if f"s_out_{i}" in z.files else None)
+            layers.append(IntLayer(
+                w_q=jnp.asarray(z[f"w_q_{i}"], jnp.int8),
+                b_q=jnp.asarray(z[f"b_q_{i}"], jnp.int32),
+                s_in=jnp.asarray(z[f"s_in_{i}"], jnp.float32),
+                s_w=jnp.asarray(z[f"s_w_{i}"], jnp.float32),
+                s_out=s_out))
     return layers
 
 

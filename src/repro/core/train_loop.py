@@ -22,9 +22,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import mrf_net, qat
-from repro.core.metrics import table1_metrics
-from repro.data.pipeline import (MRFSampleStream, T1_RANGE_MS, T2_RANGE_MS,
-                                 make_batch_factory, make_eval_set)
+from repro.core.metrics import table1_metrics_normalized
+from repro.data.pipeline import (MRFSampleStream, make_batch_factory,
+                                 make_eval_set)
 
 
 @dataclasses.dataclass
@@ -124,5 +124,4 @@ def evaluate(params, seq, *, qstate=None, int_layers=None, n: int = 5000, seed: 
         pred, _ = qat.forward_qat(params, qstate, x, train=False)
     else:
         pred = mrf_net.forward(params, x)
-    scale = jnp.array([T1_RANGE_MS[1], T2_RANGE_MS[1]])
-    return table1_metrics(jnp.asarray(pred) * scale, jnp.asarray(y) * scale)
+    return table1_metrics_normalized(jnp.asarray(pred), jnp.asarray(y))

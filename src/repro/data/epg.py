@@ -66,14 +66,13 @@ def _bloch_step(carry, frame, *, te_frac: float = 0.5):
     m, sign = carry
     fa, tr, r1, r2 = frame
     a = fa * sign
-    # RF rotation about x-axis by angle a.
+    # RF rotation about x-axis by angle a (R_x(a) applied componentwise; the
+    # rotation-matrix oracle in tests/test_mrf_core.py pins this down).
     ca, sa = jnp.cos(a), jnp.sin(a)
-    rot = jnp.array([[1.0, 0.0, 0.0], [0.0, 0.0, 0.0], [0.0, 0.0, 0.0]])
     mx = m[0]
     my = ca * m[1] + sa * m[2]
     mz = -sa * m[1] + ca * m[2]
     m = jnp.stack([mx, my, mz])
-    del rot
     # Relax to TE = te_frac * TR, read signal, then relax the rest of the TR.
     e1a = jnp.exp(-tr * te_frac * r1)
     e2a = jnp.exp(-tr * te_frac * r2)

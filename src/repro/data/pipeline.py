@@ -91,6 +91,19 @@ def make_batch_factory(stream: MRFSampleStream,
     return at
 
 
+def denormalize_targets(y, t1_range: tuple = T1_RANGE_MS,
+                        t2_range: tuple = T2_RANGE_MS):
+    """Normalised (T1/T1_max, T2/T2_max) targets/predictions -> milliseconds.
+
+    The single place that knows how ``sample_batch`` normalised its targets;
+    metrics, the examples, and the serving engine all route through here so a
+    changed stream range cannot silently corrupt reconstructed maps.
+    ``y``: (..., 2) array-like; returns float32 of the same shape.
+    """
+    scale = jnp.array([t1_range[1], t2_range[1]], jnp.float32)
+    return jnp.asarray(y, jnp.float32) * scale
+
+
 def host_sharded_key(seed: int = 0, process_index: int | None = None) -> jax.Array:
     """Per-host stream key: host i draws i.i.d. batches without coordination."""
     pidx = jax.process_index() if process_index is None else process_index

@@ -1,0 +1,27 @@
+"""Shared kernel-wrapper helpers.
+
+``interpret=None`` is the public default on every Pallas entry point in this
+repo: it resolves to the Mosaic-compiled kernel path exactly when the
+process is running on a TPU, and to interpreter mode everywhere else (CPU
+*and* GPU — the kernels use TPU-only constructs like ``pltpu.VMEM``
+scratch).  Passing an explicit ``True``/``False`` still forces a mode
+(debugging a miscompile on TPU, or timing the interpreter).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Auto-detect Pallas interpret mode: ``None`` -> compiled only on TPU.
+
+    The kernels here use TPU-only constructs (``pltpu.VMEM`` scratch), so
+    anything that isn't a TPU — CPU *and* GPU — gets the interpreter; only
+    a real TPU takes the Mosaic-compiled path.  Called at trace time
+    (``interpret`` is a static argument everywhere); the backend cannot
+    change under a live process, so resolving once per trace is safe.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

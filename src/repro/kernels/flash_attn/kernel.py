@@ -23,6 +23,8 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.common import resolve_interpret
 import jax.experimental.pallas.tpu as pltpu
 
 NEG_INF = -1e30
@@ -84,9 +86,11 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention_call(q, k, v, *, causal: bool = True, window: int = 0,
                          block_q: int = 128, block_k: int = 128,
                          group: int = 1, kv_len: int | None = None,
-                         interpret: bool = True):
+                         interpret: bool | None = None):
     """q: (BH, Sq, dh); k/v: (BH//group, Sk, dh), seqs padded to block
-    multiples; kv_len = true (unpadded) kv length.  Returns (BH, Sq, dh)."""
+    multiples; kv_len = true (unpadded) kv length.  Returns (BH, Sq, dh).
+    ``interpret=None`` auto-detects: compiled on TPU, interpreter elsewhere."""
+    interpret = resolve_interpret(interpret)
     bh, sq, dh = q.shape
     sk = k.shape[1]
     n_q, n_k = sq // block_q, sk // block_k

@@ -10,8 +10,9 @@ from repro.kernels.flash_attn.kernel import flash_attention_call
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True):
-    """q: (B, Sq, Hq, dh); k/v: (B, Sk, Hkv, dh) -> (B, Sq, Hq, dh)."""
+                    interpret: bool | None = None):
+    """q: (B, Sq, Hq, dh); k/v: (B, Sk, Hkv, dh) -> (B, Sq, Hq, dh).
+    ``interpret=None`` auto-detects (compiled on TPU, interpreter elsewhere)."""
     b, sq, hq, dh = q.shape
     sk, hkv = k.shape[1], k.shape[2]
     g = hq // hkv

@@ -34,6 +34,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.common import resolve_interpret
+
 PAD = 128  # MXU lane width; every layer is padded to this many nodes.
 
 
@@ -104,13 +106,15 @@ def _kernel(x_ref, y_ref, w_in_ref, b_in_ref,            # inputs
                                              "tile_batch", "qat", "interpret"))
 def fused_train_call(x_pad, y_pad, w_pad, b_pad, *, n_layers: int, out_dim: int,
                      lr: float, tile_batch: int, qat: bool = False,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """Run one fused pass over the whole (padded) batch.
 
     x_pad: (B, PAD) fp32; y_pad: (B, PAD) fp32; w_pad: (L, PAD, PAD);
     b_pad: (L, PAD).  B must be a multiple of tile_batch.
     Returns (w_new, b_new, per_tile_losses (B//tile_batch,)).
+    ``interpret=None`` auto-detects: compiled on TPU, interpreter elsewhere.
     """
+    interpret = resolve_interpret(interpret)
     batch, _ = x_pad.shape
     assert batch % tile_batch == 0, (batch, tile_batch)
     n_tiles = batch // tile_batch

@@ -37,7 +37,7 @@ def unpad_params(w_pad, b_pad, like):
 
 
 def fused_train_step(params, x, y, *, lr: float, tile_batch: int = 128,
-                     qat: bool = False, interpret: bool = True):
+                     qat: bool = False, interpret: bool | None = None):
     """One fused pass over batch (B, D_in)/(B, out): streams tiles through the
     VMEM-resident net.  Returns (new_params, per-tile losses)."""
     batch, d_in = x.shape
@@ -64,7 +64,7 @@ def effective_tile(batch: int, tile_batch: int) -> int:
 
 
 def make_engine_step(*, lr: float, tile_batch: int = 128, qat: bool = False,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """The ``fused_step`` backend for ``repro.train.step.make_train_step``.
 
     Conforms the kernel to the engine contract

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.common import resolve_interpret
+
 
 def _kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref, *,
             n_k: int, relu: bool, float_out: bool):
@@ -54,12 +56,14 @@ def _kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref, *,
 def qat_dense_call(x_q, w_q, b_q, scale, *, relu: bool = True,
                    float_out: bool = False, block_m: int = 128,
                    block_n: int = 128, block_k: int = 128,
-                   interpret: bool = True):
+                   interpret: bool | None = None):
     """x_q: (M, K) int8; w_q: (K, N) int8; b_q: (N,) int32; scale: (N,) fp32.
 
     M, K, N must be multiples of the block sizes (ops.py pads).
     Returns (M, N) int8 (requantized) or fp32 (float_out, the linear head).
+    ``interpret=None`` auto-detects: compiled on TPU, interpreter elsewhere.
     """
+    interpret = resolve_interpret(interpret)
     m, k = x_q.shape
     _, n = w_q.shape
     n_m, n_n, n_k = m // block_m, n // block_n, k // block_k

@@ -21,9 +21,10 @@ def _pad_to(x, m, axis):
 
 
 def qat_dense(x_q, w_q, b_q, scale, *, relu: bool = True, float_out: bool = False,
-              block: int = 128, interpret: bool = True):
+              block: int = 128, interpret: bool | None = None):
     """Ragged-shape int8 dense layer. x_q (M,K) int8, w_q (K,N) int8,
-    b_q (N,) int32, scale (N,) fp32 -> (M,N) int8 or fp32."""
+    b_q (N,) int32, scale (N,) fp32 -> (M,N) int8 or fp32.
+    ``interpret=None`` auto-detects (compiled on TPU, interpreter elsewhere)."""
     m, n = x_q.shape[0], w_q.shape[1]
     xp = _pad_to(_pad_to(x_q, block, 0), block, 1)
     wp = _pad_to(_pad_to(w_q, block, 0), block, 1)
@@ -35,7 +36,7 @@ def qat_dense(x_q, w_q, b_q, scale, *, relu: bool = True, float_out: bool = Fals
     return out[:m, :n]
 
 
-def int_forward_pallas(int_layers, x, *, interpret: bool = True):
+def int_forward_pallas(int_layers, x, *, interpret: bool | None = None):
     """Full-integer MRF inference on the Pallas path (cf. qat.int_forward)."""
     from repro.core.qat import quantize_input
 

@@ -1,11 +1,14 @@
-"""Serving launcher: batched prefill+decode over a request queue.
+"""Serving launcher: one driver, two families.
 
-``python -m repro.launch.serve --arch tinyllama-1.1b --smoke --requests 8``
+Token families (LM zoo): batched prefill + lockstep decode over a request
+pool — ``python -m repro.launch.serve --arch tinyllama-1.1b --smoke``.
 
-Implements the real serving control flow: a request pool, one batched
-prefill per admission wave, then lockstep batched decode with per-request
-stop handling — the structure the decode_32k/long_500k dry-run cells price
-at production scale.
+MRF reconstruction family: the batched map-reconstruction engine
+(``repro.serve.recon``) — ``python -m repro.launch.serve --arch mrf-fpga
+--backend int8 --smoke`` trains a QAT net (or loads ``--artifact``), exports
+and round-trips the servable int8 artifact, reconstructs a phantom-slice
+request wave through the bucketed engine, and cross-checks the int8 path
+against the ``qat.int_forward`` oracle bit-for-bit.
 """
 
 from __future__ import annotations
@@ -23,16 +26,8 @@ from repro.models.encdec import enc_len_for
 from repro.serve.decode import make_prefill_step, make_serve_step
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=16)
-    args = ap.parse_args(argv)
-
-    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+def run_token_serve(args, cfg) -> int:
+    """Batched prefill + decode for the token-generating families."""
     fns = registry.build(cfg, tp=1)
     params = fns.init(jax.random.PRNGKey(0))
     prefill = jax.jit(make_prefill_step(fns))
@@ -49,25 +44,160 @@ def main(argv=None):
         batch["frames"] = 0.02 * jax.random.normal(
             key, (b, enc_len_for(s), cfg.d_model), jnp.bfloat16)
 
+    # warmup: compile prefill + decode outside the timed region so
+    # t_prefill / t_decode measure steady-state serving, not XLA compiles
+    w_cache, w_tok, _ = prefill(params, batch)
+    w_tok, w_cache = serve(params, w_cache, w_tok, jnp.int32(s))
+    jax.block_until_ready(w_tok)
+    del w_cache, w_tok
+
     t0 = time.perf_counter()
     cache, tok, _ = prefill(params, batch)
     jax.block_until_ready(tok)
     t_prefill = time.perf_counter() - t0
 
-    outs = [np.asarray(tok)]
+    # keep device arrays in flight: no per-token host sync (np.asarray
+    # inside the loop would block dispatch pipelining every step)
+    toks = [tok]
     t0 = time.perf_counter()
     for i in range(args.gen_len - 1):
         tok, cache = serve(params, cache, tok, jnp.int32(s + i))
-        outs.append(np.asarray(tok))
+        toks.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.perf_counter() - t0
 
-    gen = np.stack(outs, axis=1)
+    gen = np.stack([np.asarray(t) for t in toks], axis=1)
     print(f"arch={cfg.name} requests={b} prompt={s} gen={args.gen_len}")
     print(f"prefill: {t_prefill*1e3:.1f} ms  decode: "
           f"{t_decode/max(args.gen_len-1,1)*1e3:.2f} ms/token/batch")
     print("sample token ids:", gen[0][:12].tolist())
     return 0
+
+
+def _train_mrf(args, cfg, *, qat_mode: bool):
+    """One training recipe for both serving backends — topology comes from
+    the arch config (``cfg.mrf_hidden``), so mrf-original serves its own
+    (deeper) net, not the adapted one."""
+    from repro.core.train_loop import TrainConfig, train
+
+    steps = (args.train_steps if args.train_steps is not None
+             else (60 if args.smoke else 600))
+    tcfg = TrainConfig(n_frames=cfg.mrf_n_frames, hidden=cfg.mrf_hidden,
+                       steps=steps, qat=qat_mode, lr=1e-3, batch_size=256,
+                       log_every=max(steps // 3, 1))
+    return train(tcfg, verbose=not args.smoke)
+
+
+def _obtain_int8_artifact(args, cfg):
+    """Load ``--artifact`` or QAT-train + export one; always serve the
+    saved-then-reloaded form so the smoke exercises the deployment unit."""
+    import tempfile
+
+    from repro.core import qat
+
+    if args.artifact:
+        return qat.load_int8_artifact(args.artifact)
+    params, qstate, _ = _train_mrf(args, cfg, qat_mode=True)
+    ints = qat.export_int8(params, qstate)
+    # round-trip through disk so the smoke serves the deployment unit, but
+    # don't leak a tempdir per run; pass --artifact to serve a kept file
+    with tempfile.TemporaryDirectory(prefix="mrf_artifact_") as tmp:
+        path = qat.save_int8_artifact(f"{tmp}/{cfg.name}_int8", ints)
+        loaded = qat.load_int8_artifact(path)
+        print(f"int8 artifact round-tripped via {path.name}")
+    return loaded
+
+
+def run_mrf_serve(args, cfg) -> int:
+    """The MRF reconstruction family through the batched serving engine."""
+    from repro.core import qat
+    from repro.data.epg import default_sequence
+    from repro.data.phantom import acquire_slice, make_phantom, tissue_errors
+    from repro.serve.recon import (ReconEngine, ReconRequest,
+                                   latency_percentiles)
+
+    backend = args.backend
+    if backend not in ("float", "int8"):
+        raise SystemExit(f"--backend {backend} is not an MRF serving backend "
+                         "(float | int8)")
+    if args.artifact and backend != "int8":
+        raise SystemExit("--artifact is an int8 deployment unit; it requires "
+                         "--backend int8 (float would silently retrain)")
+    if args.requests < 1:
+        raise SystemExit("--requests must be >= 1 for the mrf family")
+
+    ints = None
+    if backend == "int8":
+        ints = _obtain_int8_artifact(args, cfg)
+        engine = ReconEngine(backend="int8", int_layers=ints)
+    else:
+        params, _, _ = _train_mrf(args, cfg, qat_mode=False)
+        engine = ReconEngine(backend="float", params=params)
+
+    # request pool: one phantom slice per request, distinct noise draws
+    seq = default_sequence(cfg.mrf_n_frames)
+    n = args.phantom_n
+    t1_map, t2_map, mask = make_phantom(n)
+    requests = []
+    for i in range(args.requests):
+        feats, msk = acquire_slice(seq, t1_map, t2_map, mask,
+                                   key=jax.random.PRNGKey(i))
+        requests.append(ReconRequest(features=feats, mask=msk,
+                                     request_id=f"slice-{i}"))
+
+    engine.reconstruct(requests)  # warmup wave (compiles buckets)
+    results = engine.reconstruct(requests)
+    wave = engine.last_wave
+    pct = latency_percentiles(results)
+    print(f"arch={cfg.name} backend={backend} requests={len(requests)} "
+          f"voxels={wave['total_voxels']}")
+    print(f"throughput: {wave['voxels_per_s']:.0f} voxels/s   latency "
+          f"p50 {pct['p50_ms']:.1f} ms  p99 {pct['p99_ms']:.1f} ms")
+    for name, e in tissue_errors(results[0].t1_ms, results[0].t2_ms,
+                                 t1_map, mask).items():
+        print(f"  {name:6s}: T1 err {e['T1_err_%']:5.1f}%   "
+              f"T2 err {e['T2_err_%']:5.1f}%")
+
+    if backend == "int8":
+        # the acceptance check: engine int8 == software integer oracle,
+        # bit-for-bit (the paper's FPGA-vs-Python criterion, served)
+        from repro.data.pipeline import denormalize_targets
+        oracle = qat.int_forward(ints, requests[0].features)
+        want_ms = np.asarray(denormalize_targets(oracle))
+        vox = np.asarray(mask, bool)
+        if not (np.array_equal(results[0].t1_ms[vox], want_ms[:, 0])
+                and np.array_equal(results[0].t2_ms[vox], want_ms[:, 1])):
+            print("FAIL: int8 engine diverges from qat.int_forward oracle")
+            return 1
+        print("int8 engine == qat.int_forward oracle: bit-exact")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    # token-family knobs
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    # mrf-family knobs
+    ap.add_argument("--backend", default="float",
+                    help="mrf-* archs: float | int8 (full-integer Pallas)")
+    ap.add_argument("--artifact", default=None,
+                    help="mrf int8: serve this .npz artifact instead of "
+                         "training one")
+    ap.add_argument("--train-steps", type=int, default=None,
+                    help="mrf: steps for the in-process training "
+                         "(default 60 smoke / 600 full)")
+    ap.add_argument("--phantom-n", type=int, default=32,
+                    help="mrf: phantom slice side length")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.family == "mrf":
+        return run_mrf_serve(args, cfg)
+    return run_token_serve(args, cfg)
 
 
 if __name__ == "__main__":

@@ -1,1 +1,3 @@
 from repro.serve.decode import make_serve_step, make_prefill_step
+from repro.serve.recon import (ReconEngine, ReconRequest, ReconResult,
+                               latency_percentiles, plan_tiles)

@@ -52,9 +52,10 @@ class EngineConfig:
     max_grad_norm: float | None = None  # None = no clipping (paper setup)
     grad_compress: bool = False
     # fused-pallas knobs: tile_batch=1 is the paper-faithful per-sample SGD
-    # stream; 128 is the MXU-native minibatch mode.  interpret=True on CPU.
+    # stream; 128 is the MXU-native minibatch mode.  interpret=None
+    # auto-detects: the compiled kernel on TPU, interpreter elsewhere.
     tile_batch: int = 128
-    interpret: bool = True
+    interpret: bool | None = None
     donate: bool = True
 
     def __post_init__(self):

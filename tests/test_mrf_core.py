@@ -40,6 +40,34 @@ def test_augment_preserves_shape_and_adds_noise():
     assert float(jnp.linalg.norm(noisy - sig)) > 1e-3
 
 
+def test_rf_rotation_matches_matrix_oracle():
+    """The hand-inlined RF rotation in _bloch_step must equal R_x(a) @ m.
+
+    With r1 = r2 = 0 the relaxation factors are exactly 1, so the carried
+    magnetization after one TR is precisely the rotated vector — checked
+    against an explicit rotation-matrix oracle for both RF phase signs.
+    """
+    from repro.data.epg import _bloch_step
+
+    m0 = jnp.array([0.3, -0.5, 0.8], jnp.float32)
+    for a, sign in ((0.7, 1.0), (1.3, -1.0), (0.0, 1.0)):
+        (m_next, next_sign), sig = _bloch_step(
+            (m0, jnp.float32(sign)),
+            jnp.array([a, 0.012, 0.0, 0.0], jnp.float32))
+        eff = a * sign
+        rot = np.array([[1.0, 0.0, 0.0],
+                        [0.0, np.cos(eff), np.sin(eff)],
+                        [0.0, -np.sin(eff), np.cos(eff)]])
+        np.testing.assert_allclose(np.asarray(m_next), rot @ np.asarray(m0),
+                                   rtol=1e-6, atol=1e-7)
+        # the echo signal is the rotated transverse magnetization
+        np.testing.assert_allclose(
+            complex(sig), complex((rot @ np.asarray(m0))[0]
+                                  + 1j * (rot @ np.asarray(m0))[1]),
+            rtol=1e-6, atol=1e-7)
+        assert float(next_sign) == -sign  # bSSFP phase alternation
+
+
 @settings(max_examples=6, deadline=None)
 @given(t1=st.floats(300, 3000), t2_frac=st.floats(0.05, 0.5),
        seed=st.integers(0, 2**10))
