@@ -1,6 +1,13 @@
-"""MRF serving benchmark: voxels/s throughput + per-request latency
-percentiles for both recon-engine backends (float / int8-Pallas), through
-the same bucketed request pool the production launcher serves.
+"""MRF serving benchmark: sync vs pipelined serving on the same request
+trace, for both recon-engine backends (float / int8-Pallas).
+
+Sync mode is the per-tile-retirement baseline (the pre-queue engine);
+pipelined mode streams the same trace through the persistent request queue
+and the double-buffered wave executor (one host sync per wave, staging of
+wave N+1 overlapped with compute of wave N).  Both modes run the identical
+jitted per-bucket forward, so their maps are bit-identical — the benchmark
+measures pure scheduling: voxels/s plus p50/p90/p99 latency **from enqueue
+time** per mode, and ``pipelined_speedup_vs_sync`` per backend.
 
 Writes machine-readable ``BENCH_mrf_serve.json`` (regenerated in place;
 commit it to record a perf data point) besides the CSV rows run.py prints.
@@ -26,6 +33,11 @@ OUT_PATH = pathlib.Path("BENCH_mrf_serve.json")
 # ragged per-request voxel counts: a mix of partial and multi-bucket slices
 REQUEST_VOXELS = (700, 1024, 333, 96, 2048, 1500, 811, 64)
 
+# close a wave at 2 full buckets: the 6576-voxel trace splits into several
+# waves per drain, so pipelined double-buffering actually has waves to
+# overlap (one monolithic wave would make the modes trivially identical)
+MAX_WAVE_VOXELS = 2048
+
 
 def _calibrated_net(cfg, seed: int = 0):
     sizes = mrf_net.layer_sizes(cfg.mrf_n_frames, cfg.mrf_hidden)
@@ -47,7 +59,7 @@ def _request_wave(cfg, seed: int = 0):
     return reqs
 
 
-def _bench_backend(engine: ReconEngine, requests, waves: int) -> dict:
+def _bench_mode(engine: ReconEngine, requests, waves: int) -> dict:
     engine.reconstruct(requests)  # warmup: traces every bucket shape
     results = []
     wall = voxels = 0.0
@@ -57,31 +69,44 @@ def _bench_backend(engine: ReconEngine, requests, waves: int) -> dict:
         voxels += engine.last_wave["total_voxels"]
     pct = latency_percentiles(results)
     return {"voxels_per_s": voxels / max(wall, 1e-12),
-            "latency_ms": pct,
+            "latency_from_enqueue_ms": pct,
             "requests": len(results), "voxels": int(voxels),
+            "waves_per_drain": engine.last_wave["n_waves"],
             "buckets_traced": engine.compile_cache_size()}
 
 
 def run(waves: int = 5, out_path=OUT_PATH):
     """run.py suite entry: yields (name, us_per_call, derived) rows and
-    writes the JSON voxels/s + latency-percentile record."""
+    writes the JSON record — per backend, sync vs pipelined voxels/s,
+    latency-from-enqueue percentiles, and pipelined_speedup_vs_sync."""
     cfg = get_config("mrf-fpga")
     params, ints = _calibrated_net(cfg)
     requests = _request_wave(cfg)
     record = {"suite": "mrf_serve", "arch": cfg.name,
               "n_frames": cfg.mrf_n_frames,
               "request_voxels": list(REQUEST_VOXELS), "waves": waves,
+              "max_wave_voxels": MAX_WAVE_VOXELS,
               "backends": {}}
     rows = []
-    for backend, engine in (
-            ("float", ReconEngine(backend="float", params=params)),
-            ("int8", ReconEngine(backend="int8", int_layers=ints))):
-        r = _bench_backend(engine, requests, waves)
-        record["backends"][backend] = r
-        rows.append((f"mrf_serve/{backend}",
-                     r["latency_ms"]["p50_ms"] * 1e3,
-                     f"voxels/s={r['voxels_per_s']:.0f} "
-                     f"p99={r['latency_ms']['p99_ms']:.1f}ms"))
+    for backend, net_kw in (("float", {"params": params}),
+                            ("int8", {"int_layers": ints})):
+        by_mode = {}
+        for mode in ("sync", "pipelined"):
+            engine = ReconEngine(backend=backend, mode=mode,
+                                 max_wave_voxels=MAX_WAVE_VOXELS, **net_kw)
+            r = _bench_mode(engine, requests, waves)
+            by_mode[mode] = r
+            rows.append((f"mrf_serve/{backend}/{mode}",
+                         r["latency_from_enqueue_ms"]["p50_ms"] * 1e3,
+                         f"voxels/s={r['voxels_per_s']:.0f} "
+                         f"p99={r['latency_from_enqueue_ms']['p99_ms']:.1f}ms"))
+        by_mode["pipelined_speedup_vs_sync"] = (
+            by_mode["pipelined"]["voxels_per_s"]
+            / max(by_mode["sync"]["voxels_per_s"], 1e-12))
+        record["backends"][backend] = by_mode
+        rows.append((f"mrf_serve/{backend}/speedup", 0.0,
+                     f"pipelined_speedup_vs_sync="
+                     f"{by_mode['pipelined_speedup_vs_sync']:.3f}"))
     pathlib.Path(out_path).write_text(json.dumps(record, indent=1))
     rows.append(("mrf_serve/json", 0.0, f"wrote {out_path}"))
     return rows

@@ -6,8 +6,10 @@
 #   roofline_report  — §Roofline summary from the dry-run records
 #   engine_bench     — samples/s for the three MRF training backends
 #                      (writes BENCH_train_engine.json, the perf trajectory)
-#   mrf_serve_bench  — recon serving engine: voxels/s + latency percentiles
-#                      for float/int8 backends (writes BENCH_mrf_serve.json)
+#   mrf_serve_bench  — recon serving stack: sync vs pipelined voxels/s +
+#                      latency-from-enqueue percentiles and
+#                      pipelined_speedup_vs_sync for float/int8 backends
+#                      (writes BENCH_mrf_serve.json)
 from __future__ import annotations
 
 import argparse

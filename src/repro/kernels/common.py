@@ -13,6 +13,24 @@ from __future__ import annotations
 import jax
 
 
+def jit_cache_size(jitted, *, fallback: int | None = None) -> int:
+    """Compile-cache entry count of a jitted callable, jax-drift tolerant.
+
+    ``jitted._cache_size()`` is private jit API (there is no public
+    equivalent); a jax upgrade may rename or re-sign it.  Callers that can
+    derive a conservative stand-in (e.g. the serving engine's set of bucket
+    shapes actually run) pass it as ``fallback`` so a private-API break
+    degrades the *measurement*, not the serving path or its no-recompile
+    tests.  With no fallback the underlying error propagates.
+    """
+    try:
+        return int(jitted._cache_size())
+    except (AttributeError, TypeError):
+        if fallback is None:
+            raise
+        return int(fallback)
+
+
 def resolve_interpret(interpret: bool | None) -> bool:
     """Auto-detect Pallas interpret mode: ``None`` -> compiled only on TPU.
 

@@ -3,12 +3,16 @@
 Token families (LM zoo): batched prefill + lockstep decode over a request
 pool — ``python -m repro.launch.serve --arch tinyllama-1.1b --smoke``.
 
-MRF reconstruction family: the batched map-reconstruction engine
-(``repro.serve.recon``) — ``python -m repro.launch.serve --arch mrf-fpga
---backend int8 --smoke`` trains a QAT net (or loads ``--artifact``), exports
-and round-trips the servable int8 artifact, reconstructs a phantom-slice
-request wave through the bucketed engine, and cross-checks the int8 path
-against the ``qat.int_forward`` oracle bit-for-bit.
+MRF reconstruction family: the queued map-reconstruction stack
+(``repro.serve.recon`` = queue + wave executor) — ``python -m
+repro.launch.serve --arch mrf-fpga --backend int8 --smoke`` trains a QAT net
+(or loads ``--artifact``), exports and round-trips the servable int8
+artifact, reconstructs a phantom-slice request wave through the bucketed
+engine, and cross-checks the int8 path against the ``qat.int_forward``
+oracle bit-for-bit.  ``--serve-mode pipelined`` serves the same trace
+through the double-buffered executor (``--max-wave-voxels`` /
+``--max-wait-ms`` control wave formation) and additionally asserts the
+pipelined maps are bit-identical to sync serving.
 """
 
 from __future__ import annotations
@@ -126,13 +130,16 @@ def run_mrf_serve(args, cfg) -> int:
     if args.requests < 1:
         raise SystemExit("--requests must be >= 1 for the mrf family")
 
-    ints = None
+    ints = params = None
     if backend == "int8":
         ints = _obtain_int8_artifact(args, cfg)
-        engine = ReconEngine(backend="int8", int_layers=ints)
+        net_kw = dict(backend="int8", int_layers=ints)
     else:
         params, _, _ = _train_mrf(args, cfg, qat_mode=False)
-        engine = ReconEngine(backend="float", params=params)
+        net_kw = dict(backend="float", params=params)
+    engine = ReconEngine(mode=args.serve_mode,
+                         max_wave_voxels=args.max_wave_voxels,
+                         max_wait_ms=args.max_wait_ms, **net_kw)
 
     # request pool: one phantom slice per request, distinct noise draws
     seq = default_sequence(cfg.mrf_n_frames)
@@ -146,13 +153,41 @@ def run_mrf_serve(args, cfg) -> int:
                                      request_id=f"slice-{i}"))
 
     engine.reconstruct(requests)  # warmup wave (compiles buckets)
-    results = engine.reconstruct(requests)
+    if args.serve_mode == "pipelined":
+        # streaming admission: enqueue as slices "arrive", poll dispatches
+        # due waves mid-stream, drain flushes the rest double-buffered
+        tickets = []
+        for r in requests:
+            tickets.append(engine.enqueue(r))
+            engine.poll()
+        engine.drain()
+        bad = [t for t in tickets if t.result is None]
+        if bad:
+            for t in bad:
+                print(f"FAIL: request {t.request.request_id!r} "
+                      f"{t.state}: {t.error}")
+            return 1
+        results = [t.result for t in tickets]
+    else:
+        results = engine.reconstruct(requests)
     wave = engine.last_wave
     pct = latency_percentiles(results)
-    print(f"arch={cfg.name} backend={backend} requests={len(requests)} "
-          f"voxels={wave['total_voxels']}")
+    print(f"arch={cfg.name} backend={backend} mode={args.serve_mode} "
+          f"requests={len(requests)} voxels={wave['total_voxels']} "
+          f"waves={wave['n_waves']}")
     print(f"throughput: {wave['voxels_per_s']:.0f} voxels/s   latency "
           f"p50 {pct['p50_ms']:.1f} ms  p99 {pct['p99_ms']:.1f} ms")
+
+    if args.serve_mode == "pipelined":
+        # pipelining must be a pure scheduling change: same maps, bit-for-bit
+        sync_results = ReconEngine(**net_kw).reconstruct(requests)
+        for got, want in zip(results, sync_results):
+            if not (np.array_equal(got.t1_ms, want.t1_ms)
+                    and np.array_equal(got.t2_ms, want.t2_ms)):
+                print(f"FAIL: pipelined maps diverge from sync serving "
+                      f"({got.request_id})")
+                return 1
+        print("pipelined == sync serving: bit-exact")
     for name, e in tissue_errors(results[0].t1_ms, results[0].t2_ms,
                                  t1_map, mask).items():
         print(f"  {name:6s}: T1 err {e['T1_err_%']:5.1f}%   "
@@ -184,6 +219,17 @@ def main(argv=None):
     # mrf-family knobs
     ap.add_argument("--backend", default="float",
                     help="mrf-* archs: float | int8 (full-integer Pallas)")
+    ap.add_argument("--serve-mode", default="sync",
+                    choices=["sync", "pipelined"],
+                    help="mrf: sync = per-tile retirement baseline; "
+                         "pipelined = double-buffered waves, one host sync "
+                         "per wave (bit-identical maps, asserted)")
+    ap.add_argument("--max-wave-voxels", type=int, default=None,
+                    help="mrf: close a wave at this many voxels "
+                         "(default: one wave per drain)")
+    ap.add_argument("--max-wait-ms", type=float, default=None,
+                    help="mrf: admission deadline from enqueue before a "
+                         "wave is due (default: no deadline trigger)")
     ap.add_argument("--artifact", default=None,
                     help="mrf int8: serve this .npz artifact instead of "
                          "training one")

@@ -1,3 +1,5 @@
 from repro.serve.decode import make_serve_step, make_prefill_step
+from repro.serve.executor import InflightWave, WaveExecutor
+from repro.serve.queue import QueuedRequest, RequestQueue, RequestState
 from repro.serve.recon import (ReconEngine, ReconRequest, ReconResult,
                                latency_percentiles, plan_tiles)

@@ -1,0 +1,215 @@
+"""Execution layer of the recon serving stack: the double-buffered
+asynchronous wave executor.
+
+The double-buffering contract
+-----------------------------
+:class:`WaveExecutor` separates *dispatch* from *completion* so the engine
+can keep more than one wave in flight:
+
+* :meth:`WaveExecutor.dispatch` stages one wave's voxel pool onto the
+  device (a single concatenate that also pads the ragged tail up to its
+  bucket — pad-to-bucket is a device op fused into staging, not host-side
+  per-tile logic), enqueues every bucket tile on the jitted forward, and
+  returns an :class:`InflightWave` **without blocking**.  jax's async
+  dispatch means the host comes back as soon as the work is queued, so the
+  caller is free to stage + dispatch wave N+1 while the device is still
+  computing wave N — that host->device transfer / device compute overlap is
+  the entire point of the layer.
+* :meth:`InflightWave.wait` performs **one** host sync for the whole wave
+  (a single ``jax.block_until_ready`` over the trailing futures list) and
+  only then copies results to host memory.  There is deliberately no
+  per-tile sync anywhere on this path — tests assert it.
+* :meth:`InflightWave.wait_tiles` is the synchronous baseline: it syncs
+  tile by tile (the pre-refactor engine behaviour), which gives each
+  request its true completion time within the wave at the cost of stalling
+  dispatch.  ``ReconEngine(mode="sync")`` uses it; benchmarks compare the
+  two on the same trace.
+
+Shape discipline is unchanged from the monolithic engine: tiles come from
+:func:`plan_tiles` over a fixed bucket set, every tile the jitted forward
+sees has shape ``(bucket, in_dim)``, so the jit cache stays bounded by
+``len(buckets)`` (``cache_size`` — via the ``kernels.common.jit_cache_size``
+wrapper — must never exceed it).  The bucket batch axis keeps its
+``dist.shard`` annotation, so the same executor serves mesh-less or
+data-parallel; build it inside ``use_rules(...)`` — ambient rules are
+captured at first trace of each bucket shape.  Float and int8 backends run
+the exact arithmetic the monolithic engine ran, so pipelined serving is
+bit-identical to sync serving.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mrf_net
+from repro.data.pipeline import denormalize_targets
+from repro.dist.sharding import shard
+from repro.kernels.common import jit_cache_size
+from repro.kernels.qat_dense.ops import int_forward_pallas
+
+BACKENDS = ("float", "int8")
+
+# Power-of-two multiples of the 128-lane MXU tile: four shapes cover any
+# request mix (full tiles at 1024, tail padded to the smallest fit).
+DEFAULT_BUCKETS = (128, 256, 512, 1024)
+
+
+def plan_tiles(n: int, buckets: Sequence[int]) -> list:
+    """Tile ``n`` voxels into (offset, count, bucket) micro-batches.
+
+    Full tiles use the largest bucket; the remainder uses the smallest
+    bucket that fits (padded by the executor).  Covers [0, n) exactly.
+    """
+    buckets = sorted(int(b) for b in buckets)
+    if not buckets or buckets[0] <= 0:
+        raise ValueError(f"buckets must be positive: {buckets}")
+    bmax = buckets[-1]
+    tiles = []
+    off = 0
+    while n - off >= bmax:
+        tiles.append((off, bmax, bmax))
+        off += bmax
+    rem = n - off
+    if rem:
+        fit = next(b for b in buckets if b >= rem)
+        tiles.append((off, rem, fit))
+    return tiles
+
+
+@dataclasses.dataclass(eq=False)
+class InflightWave:
+    """Handle to one dispatched wave: device futures + the tile plan.
+
+    ``outputs[i]`` is the (bucket, 2) device array of denormalized
+    (T1 ms, T2 ms) predictions for ``tiles[i]``; only the first ``count``
+    rows of each are real voxels.
+    """
+
+    tiles: list          # (offset, count, bucket) in pool coordinates
+    outputs: list        # per-tile device arrays, still in flight
+    total: int           # real (unpadded) voxel count of the wave
+
+    @property
+    def n_tiles(self) -> int:
+        return len(self.tiles)
+
+    def wait(self) -> np.ndarray:
+        """Block once for the whole wave; return the (total, 2) predictions.
+
+        Exactly one host sync (``jax.block_until_ready`` over the futures
+        list) regardless of tile count — the pipelined path's contract.
+        """
+        if self.outputs:
+            jax.block_until_ready(self.outputs)
+        pred = np.empty((self.total, 2), np.float32)
+        for (off, count, _), out in zip(self.tiles, self.outputs):
+            pred[off:off + count] = np.asarray(out)[:count]
+        return pred
+
+    def wait_tiles(self):
+        """Per-tile sync generator: yields (offset, count, block) as each
+        tile lands.  The synchronous baseline — one host sync per tile."""
+        for (off, count, _), out in zip(self.tiles, self.outputs):
+            yield off, count, np.asarray(jax.block_until_ready(out))[:count]
+
+
+class WaveExecutor:
+    """Dispatches voxel waves through the jitted per-bucket forward.
+
+    ``backend="float"`` needs ``params`` (the mrf_net pytree);
+    ``backend="int8"`` needs ``int_layers`` (a ``qat.export_int8`` /
+    ``qat.load_int8_artifact`` list).  ``interpret=None`` auto-detects the
+    Pallas mode (compiled on TPU, interpreter elsewhere).
+    """
+
+    def __init__(self, *, backend: str = "float", params=None, int_layers=None,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 interpret: bool | None = None):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+        if backend == "float" and params is None:
+            raise ValueError("float backend needs params")
+        if backend == "int8" and int_layers is None:
+            raise ValueError("int8 backend needs int_layers "
+                             "(qat.export_int8 or qat.load_int8_artifact)")
+        self.backend = backend
+        self.params = params
+        self.int_layers = int_layers
+        self.buckets = tuple(sorted(int(b) for b in buckets))
+        self.interpret = interpret
+        self.in_dim = int(params[0]["w"].shape[0] if backend == "float"
+                          else int_layers[0].w_q.shape[0])
+        self._fwd = self._make_forward()
+        self.bucket_shapes_run: set = set()
+
+    def _make_forward(self):
+        # denormalization stays centralized in data.pipeline
+        # .denormalize_targets but runs *inside* the jitted forward: the
+        # elementwise rescale fuses on device, so tile outputs are already
+        # (T1, T2) in ms and each wave crosses the host boundary exactly
+        # once (no post-sync device round-trip to rescale)
+        if self.backend == "float":
+            params = self.params
+
+            def fwd(x):
+                return denormalize_targets(
+                    mrf_net.forward(params, shard(x, "batch", None)))
+        else:
+            ints, interp = self.int_layers, self.interpret
+
+            def fwd(x):
+                return denormalize_targets(
+                    int_forward_pallas(ints, shard(x, "batch", None),
+                                       interpret=interp))
+        return jax.jit(fwd)
+
+    def cache_size(self) -> int:
+        """Distinct bucket shapes traced so far; bounded by ``len(buckets)``
+        (the no-recompile property).  Tolerant of jit-internals drift."""
+        return jit_cache_size(self._fwd,
+                              fallback=len(self.bucket_shapes_run))
+
+    # -- staging + dispatch ------------------------------------------------
+
+    def stage(self, features_list: Sequence) -> tuple:
+        """Host->device staging of one wave: returns (pool, tiles, total).
+
+        One device op builds the whole pool: the per-request feature blocks
+        *and* the zero rows that pad the ragged tail to its bucket are
+        concatenated together, so pad-to-bucket happens on the device as
+        part of staging and every tile is then a static-shape slice.
+        """
+        counts = [int(f.shape[0]) for f in features_list]
+        total = sum(counts)
+        tiles = plan_tiles(total, self.buckets)
+        padded_total = (tiles[-1][0] + tiles[-1][2]) if tiles else 0
+        parts = [jnp.asarray(f, jnp.float32) for f in features_list]
+        if padded_total > total:
+            parts.append(jnp.zeros((padded_total - total, self.in_dim),
+                                   jnp.float32))
+        if parts:
+            pool = (jnp.concatenate(parts, axis=0) if len(parts) > 1
+                    else parts[0])
+        else:
+            pool = jnp.zeros((0, self.in_dim), jnp.float32)
+        return pool, tiles, total
+
+    def dispatch(self, features_list: Sequence) -> InflightWave:
+        """Stage one wave and enqueue all its tiles; never blocks.
+
+        The returned handle's outputs are device futures: call ``wait()``
+        (pipelined, one sync) or iterate ``wait_tiles()`` (sync baseline).
+        """
+        pool, tiles, total = self.stage(features_list)
+        outputs = []
+        for off, _count, bucket in tiles:
+            # only the trailing tile is padded, so pool offsets == voxel
+            # offsets and every slice is a static (bucket, in_dim) view
+            outputs.append(self._fwd(pool[off:off + bucket]))
+            self.bucket_shapes_run.add(bucket)
+        return InflightWave(tiles=tiles, outputs=outputs, total=total)

@@ -1,52 +1,57 @@
-"""Batched MRF map-reconstruction serving engine.
+"""Pipelined MRF map-reconstruction serving engine (composition layer).
 
 The paper's clinical payoff is real-time parameter-map reconstruction inside
 the scanner: a trained MLP replaces dictionary matching for per-voxel
-(T1, T2) inference at volume scale (DRONE / Barbieri et al.).  This module is
-that deployment path — the third leg of the train/dist/serve triad:
+(T1, T2) inference at volume scale (DRONE / Barbieri et al.).  Serving is a
+three-layer stack; this module is the top:
 
-* **Request pool** — each :class:`ReconRequest` is one slice/volume of
-  fingerprint features plus the voxel mask it was acquired under; a wave of
-  requests is pooled into one flat voxel stream.
-* **Bucketed micro-batching** — the stream is tiled into fixed MXU-aligned
-  buckets (:func:`plan_tiles`): full tiles at the largest bucket, the ragged
-  tail padded up to the smallest bucket that fits.  Shapes therefore come
-  from a small closed set and the jitted per-bucket forward never recompiles
-  after warmup, however ragged the requests.
-* **Two backends** — ``float`` runs ``core.mrf_net.forward`` on the trained
-  fp32 params; ``int8`` runs the full-integer export through the Pallas
-  int8 kernel (``kernels.qat_dense.int_forward_pallas``), bit-identical to
-  the ``core.qat.int_forward`` oracle.
-* **Batch-axis sharding** — the bucket batch axis is annotated with the
-  ``batch`` logical axis via ``dist.sharding.shard``, so the same engine
-  code serves mesh-less on one device and data-parallel under
-  ``use_rules(...)`` on a mesh.  Build the engine *inside* the rules scope:
-  ambient rules are captured at first trace of each bucket shape.
-* **Masked re-assembly** — per-voxel predictions are denormalised in exactly
-  one place (``data.pipeline.denormalize_targets``) and scattered back into
-  map-shaped arrays through the request's mask.
+* **Admission** (``serve.queue``) — a persistent :class:`RequestQueue`.
+  Each :class:`ReconRequest` (one slice/volume of fingerprint features plus
+  its voxel mask) is admitted as a lifecycle ticket
+  (``pending -> scheduled -> done | failed``) stamped with its enqueue time;
+  waves form under ``max_wave_voxels`` / ``max_wait_ms`` / priority policy.
+* **Execution** (``serve.executor``) — the double-buffered
+  :class:`WaveExecutor`: MXU-aligned pad-to-bucket tiling (fixed shape set,
+  jit cache bounded by the bucket count), device-side staging, asynchronous
+  tile dispatch with one host sync per wave, float (``mrf_net.forward``) or
+  full-integer int8 (``kernels.qat_dense.int_forward_pallas``) backends,
+  batch axis ``dist.shard``-annotated so the same stack serves mesh-less or
+  data-parallel (build the engine inside ``use_rules``; ambient rules are
+  captured at first trace).
+* **Engine** (here) — :class:`ReconEngine` composes the two.
+  ``mode="pipelined"`` keeps up to ``inflight_depth`` waves in flight, so
+  staging of wave N+1 overlaps device compute of wave N and each wave costs
+  one host sync; ``mode="sync"`` retires each wave tile-by-tile before
+  dispatching the next (the pre-queue engine, kept as the measured
+  baseline).  Both modes run the identical jitted per-bucket forward, so
+  their maps are bit-identical.  ``reconstruct(requests)`` is the
+  compatibility wrapper: validate everything, enqueue everything, drain.
+
+Per-voxel predictions are denormalised in exactly one place
+(``data.pipeline.denormalize_targets``, fused on-device inside the
+executor's jitted forward) and scattered back into map-shaped arrays
+through each request's mask.  ``ReconResult.latency_s`` measures
+enqueue-to-assembled time — queue wait included, not just time-in-wave.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mrf_net
-from repro.data.pipeline import denormalize_targets
-from repro.dist.sharding import shard
-from repro.kernels.qat_dense.ops import int_forward_pallas
+from repro.serve.executor import (BACKENDS, DEFAULT_BUCKETS, WaveExecutor,
+                                  plan_tiles)
+from repro.serve.queue import QueuedRequest, RequestQueue, RequestState
 
-BACKENDS = ("float", "int8")
+__all__ = ["BACKENDS", "DEFAULT_BUCKETS", "MODES", "ReconEngine",
+           "ReconRequest", "ReconResult", "latency_percentiles", "plan_tiles"]
 
-# Power-of-two multiples of the 128-lane MXU tile: four shapes cover any
-# request mix (full tiles at 1024, tail padded to the smallest fit).
-DEFAULT_BUCKETS = (128, 256, 512, 1024)
+MODES = ("sync", "pipelined")
 
 
 @dataclasses.dataclass(frozen=True, eq=False)  # eq=False: jnp array fields
@@ -75,29 +80,7 @@ class ReconResult:
     t1_ms: np.ndarray  # mask.shape maps, or (n_voxels,) when mask is None
     t2_ms: np.ndarray
     n_voxels: int
-    latency_s: float   # submit-to-assembled, within the wave
-
-
-def plan_tiles(n: int, buckets: Sequence[int]) -> list:
-    """Tile ``n`` voxels into (offset, count, bucket) micro-batches.
-
-    Full tiles use the largest bucket; the remainder uses the smallest
-    bucket that fits (padded by the caller).  Covers [0, n) exactly.
-    """
-    buckets = sorted(int(b) for b in buckets)
-    if not buckets or buckets[0] <= 0:
-        raise ValueError(f"buckets must be positive: {buckets}")
-    bmax = buckets[-1]
-    tiles = []
-    off = 0
-    while n - off >= bmax:
-        tiles.append((off, bmax, bmax))
-        off += bmax
-    rem = n - off
-    if rem:
-        fit = next(b for b in buckets if b >= rem)
-        tiles.append((off, rem, fit))
-    return tiles
+    latency_s: float   # enqueue-to-assembled (queue wait included)
 
 
 def latency_percentiles(results: Sequence[ReconResult]) -> dict:
@@ -112,124 +95,313 @@ def latency_percentiles(results: Sequence[ReconResult]) -> dict:
 
 
 class ReconEngine:
-    """Batched (T1, T2) map reconstruction over a request pool.
+    """Queued, batched (T1, T2) map reconstruction.
 
     ``backend="float"`` needs ``params`` (the mrf_net pytree);
     ``backend="int8"`` needs ``int_layers`` (a ``qat.export_int8`` /
     ``qat.load_int8_artifact`` list).  ``interpret=None`` auto-detects the
     Pallas mode (compiled on TPU, interpreter elsewhere).
+
+    Serving knobs: ``mode`` picks the executor discipline ("sync" = per-tile
+    retirement, the baseline; "pipelined" = up to ``inflight_depth`` waves
+    in flight, one host sync per wave); ``max_wave_voxels`` caps a wave,
+    ``max_wait_ms`` is the admission deadline from enqueue (see
+    ``serve.queue``).  Defaults (no cap, no deadline, sync) make
+    :meth:`reconstruct` behave exactly like the pre-queue engine.
     """
 
     def __init__(self, *, backend: str = "float", params=None, int_layers=None,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
-                 interpret: bool | None = None):
-        if backend not in BACKENDS:
-            raise ValueError(f"backend {backend!r} not in {BACKENDS}")
-        if backend == "float" and params is None:
-            raise ValueError("float backend needs params")
-        if backend == "int8" and int_layers is None:
-            raise ValueError("int8 backend needs int_layers "
-                             "(qat.export_int8 or qat.load_int8_artifact)")
-        self.backend = backend
-        self.params = params
-        self.int_layers = int_layers
-        self.buckets = tuple(sorted(int(b) for b in buckets))
-        self.interpret = interpret
-        self.in_dim = int(params[0]["w"].shape[0] if backend == "float"
-                          else int_layers[0].w_q.shape[0])
-        self._fwd = self._make_forward()
-        self.bucket_shapes_run: set = set()
+                 interpret: bool | None = None, mode: str = "sync",
+                 max_wave_voxels: int | None = None,
+                 max_wait_ms: float | None = None, inflight_depth: int = 2,
+                 clock=time.perf_counter):
+        if mode not in MODES:
+            raise ValueError(f"mode {mode!r} not in {MODES}")
+        if inflight_depth < 1:
+            raise ValueError(f"inflight_depth must be >= 1: {inflight_depth}")
+        self.mode = mode
+        self.executor = WaveExecutor(backend=backend, params=params,
+                                     int_layers=int_layers, buckets=buckets,
+                                     interpret=interpret)
+        # one time source for enqueue stamps AND completion stamps, so an
+        # injected test clock yields coherent latencies
+        self._clock = clock
+        self.queue = RequestQueue(max_wave_voxels=max_wave_voxels,
+                                  max_wait_ms=max_wait_ms,
+                                  validator=self._validate, clock=clock)
+        self._depth = 1 if mode == "sync" else int(inflight_depth)
+        self._inflight: collections.deque = collections.deque()
+        # aggregate stats of waves poll() retired (or that died at
+        # dispatch) since the last drain — folded into the next drain's
+        # last_wave.  Stats only, never ticket references: a long-lived
+        # enqueue/poll streaming server must not accumulate served
+        # features/maps in the engine (the caller holds the tickets).
+        self._early_stats = self._zero_stats()
+        self._t_epoch: float | None = None  # first dispatch since last drain
         self.last_wave: dict = {}
 
-    # -- forward ----------------------------------------------------------
+    @staticmethod
+    def _zero_stats() -> dict:
+        return {"n_done": 0, "voxels": 0, "n_failed": 0, "n_waves": 0}
 
-    def _make_forward(self):
-        if self.backend == "float":
-            params = self.params
+    def _fold_early(self, wave: list) -> None:
+        """Account a wave finalized outside drain() into the early stats."""
+        if not wave:
+            return
+        self._early_stats["n_waves"] += 1
+        for t in wave:
+            if t.state == RequestState.DONE:
+                self._early_stats["n_done"] += 1
+                self._early_stats["voxels"] += t.request.n_voxels
+            else:
+                self._early_stats["n_failed"] += 1
 
-            def fwd(x):
-                return mrf_net.forward(params, shard(x, "batch", None))
-        else:
-            ints, interp = self.int_layers, self.interpret
+    # -- thin views over the layers (the executor owns the network state) --
 
-            def fwd(x):
-                return int_forward_pallas(ints, shard(x, "batch", None),
-                                          interpret=interp)
-        return jax.jit(fwd)
+    @property
+    def backend(self) -> str:
+        return self.executor.backend
+
+    @property
+    def params(self):
+        return self.executor.params
+
+    @property
+    def int_layers(self):
+        return self.executor.int_layers
+
+    @property
+    def buckets(self) -> tuple:
+        return self.executor.buckets
+
+    @property
+    def in_dim(self) -> int:
+        return self.executor.in_dim
+
+    @property
+    def bucket_shapes_run(self) -> set:
+        return self.executor.bucket_shapes_run
 
     def compile_cache_size(self) -> int:
         """Number of distinct bucket shapes traced so far (must stay bounded
         by ``len(self.buckets)`` — the no-recompile property)."""
-        return int(self._fwd._cache_size())
+        return self.executor.cache_size()
 
-    # -- serving ----------------------------------------------------------
+    # -- validation (admission-time, once per request) ---------------------
+
+    def _validate(self, r: ReconRequest) -> str | None:
+        if not hasattr(r.features, "shape"):
+            return (f"request {r.request_id!r} features must be an array "
+                    f"with .shape: got {type(r.features).__name__}")
+        if len(r.features.shape) != 2:
+            return (f"request {r.request_id!r} features must be rank-2 "
+                    f"(n_voxels, features): got shape "
+                    f"{tuple(r.features.shape)}")
+        if int(r.features.shape[-1]) != self.in_dim:
+            return (f"request {r.request_id!r} has feature dim "
+                    f"{r.features.shape[-1]}, engine expects {self.in_dim}")
+        # count the bool cast, exactly what _assemble scatters through —
+        # e.g. an int mask [2, 1, 0] sums to 3 but selects 2 cells
+        if r.mask is not None and int(np.asarray(r.mask, bool).sum()) != r.n_voxels:
+            return (f"request {r.request_id!r}: mask selects "
+                    f"{int(np.asarray(r.mask, bool).sum())} voxels, features "
+                    f"carry {r.n_voxels}")
+        return None
+
+    # -- streaming API -----------------------------------------------------
+
+    def enqueue(self, request: ReconRequest, *,
+                priority: int = 0) -> QueuedRequest:
+        """Admit one request; returns its lifecycle ticket.
+
+        Invalid requests come back already ``failed`` (``ticket.error`` set)
+        — admission never raises and never disturbs pending requests.
+        """
+        return self.queue.submit(request, priority=priority)
+
+    def poll(self) -> int:
+        """Dispatch every wave the formation policy says is due; no blocking
+        beyond pipeline-full backpressure.  Returns waves dispatched.
+
+        Waves retired here under backpressure finalize their tickets (the
+        caller holds those) and fold into the next :meth:`drain`'s stats —
+        nothing served is dropped, and nothing is retained by the engine.
+        """
+        n = 0
+        while self.queue.n_pending and self.queue.wave_due():
+            if len(self._inflight) >= self._depth:
+                self._fold_early(self._retire_oldest())
+            if self._dispatch(self.queue.form_wave()):
+                n += 1  # waves that died at dispatch don't count as work
+        return n
+
+    def drain(self) -> list:
+        """Serve everything: flush the queue through the executor, keeping
+        up to ``inflight_depth`` waves in flight (pipelined) or exactly one
+        retired tile-by-tile (sync).  Returns results in completion order;
+        each ticket's ``result``/``state`` is updated in place.
+
+        Returns the results of waves retired by this call; waves already
+        retired by :meth:`poll` live on their tickets (the streaming caller
+        holds those) and are folded into the stats only.  ``self.last_wave``
+        covers the whole serving session since the previous drain, with
+        ``wall_s`` spanning from the session's first dispatch, so streamed
+        and batch serving report comparable throughput.
+        """
+        t0 = self._t_epoch if self._t_epoch is not None else self._clock()
+        retired: list[QueuedRequest] = []
+        n_waves = 0
+        while self.queue.n_pending or self._inflight:
+            # keep the pipeline full: stage + dispatch wave N+1 while the
+            # device still computes wave N (async dispatch returns at once)
+            while self.queue.n_pending and len(self._inflight) < self._depth:
+                self._dispatch(self.queue.form_wave(flush=True))
+            wave_tickets = self._retire_oldest()
+            if wave_tickets:  # don't count a phantom wave when every
+                retired.extend(wave_tickets)  # dispatch this round failed
+                n_waves += 1
+        early = self._early_stats  # poll retirements + dispatch failures
+        self._early_stats = self._zero_stats()
+        wall = self._clock() - t0
+        self._t_epoch = None
+        served = [t for t in retired if t.state == RequestState.DONE]
+        total = sum(t.request.n_voxels for t in served) + early["voxels"]
+        n_req = len(served) + early["n_done"]
+        self.last_wave = {"n_requests": n_req, "total_voxels": total,
+                          "wall_s": wall,
+                          "voxels_per_s": total / max(wall, 1e-12),
+                          "n_waves": n_waves + early["n_waves"],
+                          "mode": self.mode,
+                          "n_failed": (len(retired) - len(served)
+                                       + early["n_failed"])}
+        return [t.result for t in served]
+
+    # -- compatibility wrapper --------------------------------------------
 
     def reconstruct(self, requests: Sequence[ReconRequest]) -> list:
-        """Serve one wave: pool, tile into buckets, predict, re-assemble.
+        """Serve one batch: validate all, enqueue all, drain.
 
-        Returns one :class:`ReconResult` per request, in request order.
-        Requests complete as the tiles covering them finish, so
-        ``latency_s`` is each request's true completion time within the
-        wave.  Wave-level stats land in ``self.last_wave``.
+        All-or-nothing admission: *every* request is validated before any
+        is admitted, so a bad request raises here without half-serving the
+        others (the streaming path instead marks it ``failed`` — see
+        :meth:`enqueue`).  Returns one :class:`ReconResult` per request, in
+        request order; if serving any request failed mid-wave (dispatch,
+        execution, or assembly), the wave still completes for everyone
+        else and *then* this raises (never a silent ``None`` in the batch
+        API).
         """
         if not requests:
             self.last_wave = {"n_requests": 0, "total_voxels": 0,
-                              "wall_s": 0.0, "voxels_per_s": 0.0}
+                              "wall_s": 0.0, "voxels_per_s": 0.0,
+                              "n_waves": 0, "mode": self.mode, "n_failed": 0}
             return []
         for r in requests:
-            if int(r.features.shape[-1]) != self.in_dim:
-                raise ValueError(
-                    f"request {r.request_id!r} has feature dim "
-                    f"{r.features.shape[-1]}, engine expects {self.in_dim}")
-            if r.mask is not None and int(np.asarray(r.mask).sum()) != r.n_voxels:
-                raise ValueError(
-                    f"request {r.request_id!r}: mask selects "
-                    f"{int(np.asarray(r.mask).sum())} voxels, features carry "
-                    f"{r.n_voxels}")
+            err = self._validate(r)
+            if err is not None:
+                raise ValueError(err)
+        # validated above, all-or-nothing: skip submit's re-validation
+        tickets = [self.queue.submit(r, validate=False) for r in requests]
+        self.drain()
+        failed = [t for t in tickets if t.state == RequestState.FAILED]
+        if failed:
+            # each ticket's error names the failing stage (dispatch /
+            # execution / assembly); don't relabel it here
+            raise ValueError(
+                f"{len(failed)} request(s) failed while serving the wave: "
+                + "; ".join(t.error for t in failed[:3]))
+        return [t.result for t in tickets]
 
-        t_wave = time.perf_counter()
-        counts = [r.n_voxels for r in requests]
-        total = sum(counts)
-        ends = np.cumsum(counts)
-        pool = (jnp.concatenate([jnp.asarray(r.features, jnp.float32)
-                                 for r in requests], axis=0)
-                if len(requests) > 1
-                else jnp.asarray(requests[0].features, jnp.float32))
+    # -- wave mechanics ----------------------------------------------------
 
-        pred_norm = np.empty((total, 2), np.float32)
-        results: list = [None] * len(requests)
-        done = covered = 0
+    def _dispatch(self, wave: list) -> bool:
+        """Stage + enqueue one wave; True iff it actually entered flight."""
+        if not wave:
+            return False
+        t_start = self._clock()
+        try:
+            handle = self.executor.dispatch(
+                [t.request.features for t in wave])
+        except Exception as e:
+            # an executor failure must stay a lifecycle state too: a wave
+            # that cannot stage marks its tickets failed instead of raising
+            # out of poll()/drain() and stranding them as "scheduled"
+            for t in wave:
+                t.state = RequestState.FAILED
+                t.error = f"wave dispatch failed: {type(e).__name__}: {e}"
+            # failures only — a wave that never entered flight is not
+            # counted in n_waves
+            self._early_stats["n_failed"] += len(wave)
+            return False
+        if self._t_epoch is None:
+            # session clock starts at the first wave that actually entered
+            # flight; a wave dying at dispatch must not skew wall_s
+            self._t_epoch = t_start
+        self._inflight.append((wave, handle))
+        return True
 
-        def drain():  # assemble every request whose voxels are all computed
+    def _retire_oldest(self) -> list:
+        """Complete the oldest in-flight wave and assemble its requests.
+
+        Sync mode syncs tile-by-tile so each request is assembled the
+        moment its last tile lands; pipelined mode blocks once for the
+        whole wave (``InflightWave.wait``) and assembles everything.
+        """
+        if not self._inflight:
+            return []
+        wave, handle = self._inflight.popleft()
+        counts = [t.request.n_voxels for t in wave]
+        ends = np.cumsum(counts) if counts else np.zeros(0, np.int64)
+        pred_ms = None
+        done = 0
+
+        def assemble_upto(covered):
             nonlocal done
-            now = time.perf_counter()
-            while done < len(requests) and ends[done] <= covered:
-                start = ends[done] - counts[done]
-                results[done] = self._assemble(
-                    requests[done], pred_norm[start:ends[done]], now - t_wave)
+            now = self._clock()
+            while done < len(wave) and ends[done] <= covered:
+                end = int(ends[done])
+                self._finish(wave[done], pred_ms[end - counts[done]:end], now)
                 done += 1
 
-        for off, count, bucket in plan_tiles(total, self.buckets):
-            chunk = pool[off:off + count]
-            if count < bucket:  # pad-to-bucket: shapes never leave the set
-                chunk = jnp.pad(chunk, ((0, bucket - count), (0, 0)))
-            out = self._fwd(chunk)
-            self.bucket_shapes_run.add(bucket)
-            # per-tile sync: completed requests get their true latency
-            pred_norm[off:off + count] = np.asarray(
-                jax.block_until_ready(out))[:count]
-            covered += count
-            drain()
-        drain()  # a wave of only zero-voxel requests produces no tiles
-        wall = time.perf_counter() - t_wave
-        self.last_wave = {"n_requests": len(requests), "total_voxels": total,
-                          "wall_s": wall,
-                          "voxels_per_s": total / max(wall, 1e-12)}
-        return results
+        # tiles come back already denormalized (ms): the rescale lives
+        # inside the executor's jitted forward, so retirement adds no
+        # device round-trip after the executor's single sync
+        try:
+            if self.mode == "sync":
+                pred_ms = np.empty((handle.total, 2), np.float32)
+                covered = 0
+                for off, count, block in handle.wait_tiles():
+                    pred_ms[off:off + count] = block
+                    covered += count
+                    assemble_upto(covered)
+            else:
+                pred_ms = handle.wait()
+            assemble_upto(handle.total)  # remainder incl. zero-voxel requests
+        except Exception as e:
+            # device-side execution failures are lifecycle states too: the
+            # wave was already popped, so strand nothing in "scheduled"
+            for t in wave:
+                if t.state == RequestState.SCHEDULED:
+                    t.state = RequestState.FAILED
+                    t.error = (f"wave execution failed: "
+                               f"{type(e).__name__}: {e}")
+        return wave
 
-    def _assemble(self, req: ReconRequest, pred_norm_slice: np.ndarray,
+    def _finish(self, ticket: QueuedRequest, pred_ms_slice: np.ndarray,
+                now: float) -> None:
+        try:
+            ticket.result = self._assemble(ticket.request, pred_ms_slice,
+                                           now - ticket.enqueue_t)
+        except Exception as e:  # surface as lifecycle state, not out of wave
+            ticket.state = RequestState.FAILED
+            ticket.error = f"{type(e).__name__}: {e}"
+            return
+        ticket.state = RequestState.DONE
+        ticket.done_t = now
+
+    def _assemble(self, req: ReconRequest, pred_ms: np.ndarray,
                   latency_s: float) -> ReconResult:
-        pred_ms = np.asarray(denormalize_targets(pred_norm_slice))
+        """Scatter one request's already-denormalized (ms) predictions."""
         if req.mask is not None:
             mask = np.asarray(req.mask, bool)
             t1 = np.zeros(mask.shape, np.float32)

@@ -1,0 +1,29 @@
+"""Shared fixtures for the serving test suites (test_serve_recon /
+test_serve_queue): one smoke-sized calibrated net and feature factory, so
+the recipe can't drift between the files.  benchmarks/mrf_serve_bench.py
+keeps its own cfg-driven variant (full-size topology from the arch config,
+not this fixed smoke net)."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mrf_net, qat
+
+N_FRAMES = 16  # smoke-sized net: (32, 64, 64, 32, 16, 16, 16, 2)
+
+
+def calibrated_net(seed=0):
+    """(params, qat_state, int8_export) for the smoke net — random weights
+    plus observer calibration passes; serving needs no trained net."""
+    sizes = mrf_net.layer_sizes(N_FRAMES)
+    params = mrf_net.init_params(jax.random.PRNGKey(seed), sizes)
+    qs = qat.init_qat_state(len(params))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (64, sizes[0]))
+    for _ in range(3):
+        _, qs = qat.forward_qat(params, qs, x)
+    return params, qs, qat.export_int8(params, qs)
+
+
+def features(n, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, 2 * N_FRAMES),
+                             jnp.float32)

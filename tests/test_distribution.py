@@ -107,6 +107,69 @@ _SUBPROC = textwrap.dedent("""
 """)
 
 
+_SP_SUBPROC = textwrap.dedent("""
+    import os, json, re
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import sys; sys.path.insert(0, "src")
+    import jax
+    from repro.configs import get_smoke
+    from repro.configs.base import ShapeCell
+    from repro.dist.sharding import make_compat_mesh, use_rules
+    from repro.launch import input_specs as specs_mod
+    from repro.launch.mesh import rules_for
+    from repro.models import registry
+
+    mesh = make_compat_mesh((4, 4), ("data", "model"))
+    cfg = get_smoke("tinyllama-1.1b")
+    cell = ShapeCell("t", 16, 8, "train")
+    fns = registry.build(cfg, tp=mesh.shape["model"])
+    params_s = specs_mod.params_specs(cfg, mesh.shape["model"])
+    batch_s = specs_mod.batch_specs(cfg, cell)
+
+    # the (batch, seq, d_model) activation annotations in the lowered HLO:
+    # shard(h, "batch", "act_seq", None) custom calls on 8x16x64 tensors
+    pat = re.compile(r'@Sharding\\(%\\d+\\) \\{backend_config = "", '
+                     r'mhlo.sharding = "\\{([^}]*)\\}"[^:]*'
+                     r': \\(tensor<8x16x64x')
+
+    def act_shardings(sp):
+        rules = rules_for(mesh, global_batch=cell.global_batch,
+                          sequence_parallel=sp)
+        fresh = lambda p, b: fns.loss(p, b)  # defeat jax's trace cache:
+        # ambient rules are invisible to its key, so reusing the same
+        # function object would replay the other variant's trace
+        with use_rules(rules):
+            txt = jax.jit(fresh).lower(params_s, batch_s).as_text()
+        return rules.rules["act_seq"], pat.findall(txt)
+
+    sp_rule, sp_sh = act_shardings(True)
+    base_rule, base_sh = act_shardings(False)
+    print(json.dumps({"sp_rule": sp_rule, "base_rule": base_rule,
+                      "sp_shardings": sp_sh, "base_shardings": base_sh}))
+""")
+
+
+def test_sequence_parallel_lowers_act_seq_to_model():
+    """ROADMAP open item: ``rules_for(..., sequence_parallel=True)`` must
+    map ``act_seq -> model`` all the way into the jitted HLO of a token
+    arch — the (batch, seq, d) activations carry a devices=[4,4,1]
+    sharding (seq over the model axis), which vanishes without sp."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _SP_SUBPROC], capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["sp_rule"] == "model" and out["base_rule"] is None
+    assert out["sp_shardings"], "no act_seq annotations found in the HLO"
+    assert all(s.startswith("devices=[4,4,1]") for s in out["sp_shardings"])
+    # without sequence_parallel the seq dim stays unsharded (replicated
+    # across the model axis): 4 batch shards, trailing replication tile
+    assert out["base_shardings"], "baseline act annotations vanished"
+    assert all(s.startswith("devices=[4,1,1,4]")
+               for s in out["base_shardings"])
+
+
 @pytest.mark.parametrize("archs", [
     ["tinyllama-1.1b", "phi3.5-moe-42b-a6.6b"],
     ["mamba2-1.3b", "seamless-m4t-large-v2"],

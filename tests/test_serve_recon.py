@@ -14,29 +14,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _serve_helpers import (calibrated_net as _calibrated_net,
+                            features as _features)
+
 from repro.core import mrf_net, qat
 from repro.data.pipeline import denormalize_targets
 from repro.serve.recon import (DEFAULT_BUCKETS, ReconEngine, ReconRequest,
                                latency_percentiles, plan_tiles)
 
 jax.config.update("jax_platform_name", "cpu")
-
-N_FRAMES = 16  # smoke-sized net: (32, 64, 64, 32, 16, 16, 16, 2)
-
-
-def _calibrated_net(seed=0):
-    sizes = mrf_net.layer_sizes(N_FRAMES)
-    params = mrf_net.init_params(jax.random.PRNGKey(seed), sizes)
-    qs = qat.init_qat_state(len(params))
-    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (64, sizes[0]))
-    for _ in range(3):
-        _, qs = qat.forward_qat(params, qs, x)
-    return params, qs, qat.export_int8(params, qs)
-
-
-def _features(n, seed=0):
-    return jax.random.normal(jax.random.PRNGKey(seed), (n, 2 * N_FRAMES),
-                             jnp.float32)
 
 
 # --------------------------------------------------------------------------
