@@ -1,6 +1,10 @@
 """Engine throughput trajectory: samples/s for the three MRF training
 backends (float / qat-int8 / fused-pallas) through the unified engine, on the
-paper's adapted net.
+paper's adapted net — in both dispatch modes: stepwise (one Python dispatch +
+one host sync per step, the baseline) and chunked (``chunk_steps`` steps per
+``lax.scan`` dispatch with in-scan batch synthesis, one async metrics fetch
+per chunk).  The two are bit-identical, so ``chunk_speedup_vs_stepwise`` is
+pure dispatch-overhead recovery.
 
 Besides the CSV rows the run.py harness prints, writes machine-readable
 ``BENCH_train_engine.json`` so successive PRs can track the perf trajectory
@@ -16,7 +20,6 @@ import tempfile
 import jax
 
 from repro.configs import get_config
-from repro.data.pipeline import make_batch_factory
 from repro.ft.runner import RunnerConfig
 from repro.models import registry
 from repro.train import engine
@@ -31,39 +34,80 @@ BACKEND_CFGS = {
 
 
 def _bench_backend(fns, backend: str, steps: int, batch: int,
-                   warmup: int) -> dict:
+                   warmup: int, chunk_steps: int = 1,
+                   repeats: int = 3) -> dict:
+    """Steady-state per-step time from the runner's on_metrics ticks.
+
+    Stepwise: each tick's dt is a synced per-step wall time.  Chunked: each
+    tick carries chunk_wall/n, so a steady tick is the true per-step cost
+    incl. the once-per-chunk dispatch + metrics fetch.  ``warmup`` steps
+    (compile + cache warm) are discarded; for chunked runs the caller passes
+    a whole first chunk as warmup so every steady chunk is full-length (no
+    ragged-tail recompile in the timed region).
+
+    Aggregation is timeit-style best-of-``repeats`` medians: the shared CPU
+    rig throws multi-ms scheduler stalls that can poison a whole run, and
+    the fastest repeat's median is the closest observable to what the
+    hardware allows.
+    """
     stream = engine.default_stream(fns.cfg, batch)
     ecfg = engine.EngineConfig(backend=backend, max_grad_norm=None,
+                               chunk_steps=chunk_steps,
                                **BACKEND_CFGS[backend])
-    dts = []  # per-step wall times from the runner; head includes compile
-    with tempfile.TemporaryDirectory(prefix="engine_bench_") as ckpt:
-        rcfg = RunnerConfig(total_steps=steps + warmup, ckpt_dir=ckpt,
-                            ckpt_every=steps + warmup + 1)
-        _, _, info = engine.train(
-            fns, ecfg, rcfg,
-            batches=make_batch_factory(stream, jax.random.PRNGKey(1)),
-            batch_size=batch,
-            on_metrics=lambda step, metrics, dt: dts.append(dt))
-    steady = dts[warmup:]
-    per_step = sum(steady) / len(steady)
-    return {"samples_per_s": batch / per_step,
-            "us_per_step": per_step * 1e6,
-            "wall_seconds": info["wall_seconds"], "steps": steps}
+    best, wall = None, None
+    for _ in range(repeats):
+        dts = []  # per-step wall times from the runner; head incl. compile
+        with tempfile.TemporaryDirectory(prefix="engine_bench_") as ckpt:
+            total = steps + warmup
+            rcfg = RunnerConfig(total_steps=total, ckpt_dir=ckpt,
+                                ckpt_every=total + 1)
+            _, _, info = engine.train(
+                fns, ecfg, rcfg, stream=stream,
+                data_key=jax.random.PRNGKey(1), batch_size=batch,
+                on_metrics=lambda step, metrics, dt: dts.append(dt))
+        steady = sorted(dts[warmup:])
+        med = steady[len(steady) // 2]
+        if best is None or med < best:
+            best, wall = med, info["wall_seconds"]
+    return {"samples_per_s": batch / best,
+            "us_per_step": best * 1e6,
+            "wall_seconds": wall, "steps": steps,
+            "chunk_steps": chunk_steps, "repeats": repeats}
 
 
-def run(steps: int = 20, batch: int = 256, out_path=OUT_PATH):
+def run(steps: int = 24, batch: int = 16, chunk_steps: int = 16,
+        out_path=OUT_PATH):
     """run.py suite entry: yields (name, us_per_call, derived) rows and
-    writes the JSON trajectory file."""
+    writes the JSON trajectory file (stepwise + chunked per backend).
+
+    batch=16 is the dispatch-bound regime chunking targets: per-step device
+    work under the host round-trip cost — the paper's whole premise for the
+    <30k-param net, whose FPGA loop streams per-sample.  Larger batches
+    shift the loop compute-bound (chunking still wins, by less).  The JSON
+    records the batch, so trajectory points stay self-describing across PRs.
+    """
     cfg = get_config("mrf-fpga")
     fns = registry.build(cfg)
+    # chunked timed region: whole chunks only (first chunk = warmup)
+    chunked_steps = max(1, round(steps / chunk_steps)) * chunk_steps
     record = {"suite": "train_engine", "arch": cfg.name, "batch": batch,
-              "n_frames": cfg.mrf_n_frames, "backends": {}}
+              "n_frames": cfg.mrf_n_frames, "chunk_steps": chunk_steps,
+              "backends": {}}
     rows = []
     for backend in ("float", "qat-int8", "fused-pallas"):
         r = _bench_backend(fns, backend, steps=steps, batch=batch, warmup=2)
+        c = _bench_backend(fns, backend, steps=chunked_steps, batch=batch,
+                           warmup=chunk_steps, chunk_steps=chunk_steps)
+        r["chunked"] = c
+        r["chunk_speedup_vs_stepwise"] = (
+            c["samples_per_s"] / r["samples_per_s"])
         record["backends"][backend] = r
         rows.append((f"engine/{backend}", r["us_per_step"],
                      f"samples/s={r['samples_per_s']:.0f}"))
+        rows.append((f"engine/{backend}/chunked{chunk_steps}",
+                     c["us_per_step"],
+                     f"samples/s={c['samples_per_s']:.0f} "
+                     f"speedup={r['chunk_speedup_vs_stepwise']:.2f}x"))
     pathlib.Path(out_path).write_text(json.dumps(record, indent=1))
     rows.append(("engine/json", 0.0, f"wrote {out_path}"))
     return rows

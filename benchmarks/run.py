@@ -4,7 +4,9 @@
 #   table_resources  — paper §3 FPGA resource estimates
 #   kernel_bench     — Pallas kernel micro-benchmarks vs oracles
 #   roofline_report  — §Roofline summary from the dry-run records
-#   engine_bench     — samples/s for the three MRF training backends
+#   engine_bench     — samples/s for the three MRF training backends,
+#                      stepwise AND chunked dispatch (--chunk-steps) with
+#                      chunk_speedup_vs_stepwise per backend
 #                      (writes BENCH_train_engine.json, the perf trajectory)
 #   mrf_serve_bench  — recon serving stack: sync vs pipelined voxels/s +
 #                      latency-from-enqueue percentiles and
@@ -24,6 +26,9 @@ def main() -> None:
                     help="training steps for table1 (scaled schedule)")
     ap.add_argument("--engine-steps", type=int, default=20,
                     help="timed steps per backend for the engine suite")
+    ap.add_argument("--chunk-steps", type=int, default=16,
+                    help="chunk length for the engine suite's chunked-mode "
+                         "runs (the stepwise baseline always runs too)")
     ap.add_argument("--serve-waves", type=int, default=5,
                     help="timed request waves per backend for mrf_serve")
     args = ap.parse_args()
@@ -38,7 +43,8 @@ def main() -> None:
         ("resources", table_resources.run, {}),
         ("kernels", kernel_bench.run, {}),
         ("roofline", roofline_report.run, {}),
-        ("engine", engine_bench.run, {"steps": args.engine_steps}),
+        ("engine", engine_bench.run, {"steps": args.engine_steps,
+                                      "chunk_steps": args.chunk_steps}),
         ("mrf_serve", mrf_serve_bench.run, {"waves": args.serve_waves}),
         ("table1", table1_metrics.run, {"steps": args.steps}),
     ]

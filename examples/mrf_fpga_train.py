@@ -19,7 +19,7 @@ from repro.configs import get_config
 from repro.core import fpga_cost_model as fcm
 from repro.core import mrf_net
 from repro.core.metrics import table1_metrics_normalized
-from repro.data.pipeline import make_batch_factory, make_eval_set
+from repro.data.pipeline import make_eval_set
 from repro.ft.runner import RunnerConfig
 from repro.models import registry
 from repro.train import engine
@@ -34,6 +34,11 @@ def main():
                     default="minibatch",
                     help="stream = paper-faithful per-sample SGD (slow on "
                          "CPU interpret mode); minibatch = MXU-native")
+    ap.add_argument("--chunk-steps", type=int, default=1,
+                    help=">1: lax.scan chunk per dispatch with in-scan batch "
+                         "synthesis (bit-identical; cuts host dispatch "
+                         "overhead, the fair setting for the Eq. 3 "
+                         "extrapolation)")
     args = ap.parse_args()
 
     cfg = get_config("mrf-fpga")
@@ -45,7 +50,8 @@ def main():
     print(f"fused on-accelerator training: {args.mode} mode, "
           f"{args.steps} x {args.batch} samples, net {sizes}")
     ecfg = engine.EngineConfig(backend="fused-pallas", lr=args.lr,
-                               optimizer="sgd", tile_batch=tile)
+                               optimizer="sgd", tile_batch=tile,
+                               chunk_steps=args.chunk_steps)
 
     def log(step, metrics, dt):
         if (step - 1) % 50 == 0 or step == args.steps:
@@ -55,8 +61,7 @@ def main():
         rcfg = RunnerConfig(total_steps=args.steps, ckpt_dir=ckpt_dir,
                             ckpt_every=max(args.steps // 3, 1))
         state, _, info = engine.train(
-            fns, ecfg, rcfg,
-            batches=make_batch_factory(stream, jax.random.PRNGKey(1)),
+            fns, ecfg, rcfg, stream=stream, data_key=jax.random.PRNGKey(1),
             init_key=jax.random.PRNGKey(0), batch_size=args.batch,
             on_metrics=log)
     wall = info["wall_seconds"]

@@ -23,8 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import mrf_net, qat
 from repro.core.metrics import table1_metrics_normalized
-from repro.data.pipeline import (MRFSampleStream, make_batch_factory,
-                                 make_eval_set)
+from repro.data.pipeline import MRFSampleStream, make_eval_set
 
 
 @dataclasses.dataclass
@@ -43,6 +42,8 @@ class TrainConfig:
     ckpt_dir: str | None = None  # None -> throwaway temp dir
     ckpt_every: int = 0         # 0 -> no periodic checkpoints
     tile_batch: int = 128       # fused-pallas only
+    chunk_steps: int = 1        # >1: lax.scan chunk per dispatch (bit-
+                                # identical; see repro.train.engine)
 
 
 def train(cfg: TrainConfig, stream: MRFSampleStream | None = None,
@@ -74,7 +75,8 @@ def train(cfg: TrainConfig, stream: MRFSampleStream | None = None,
     fns = build_mrf(model_cfg)
     ecfg = engine.EngineConfig(backend=backend, lr=cfg.lr,
                                optimizer=cfg.optimizer, max_grad_norm=None,
-                               tile_batch=cfg.tile_batch)
+                               tile_batch=cfg.tile_batch,
+                               chunk_steps=cfg.chunk_steps)
 
     history = []
 
@@ -100,8 +102,11 @@ def train(cfg: TrainConfig, stream: MRFSampleStream | None = None,
     try:
         rcfg = RunnerConfig(total_steps=cfg.steps, ckpt_dir=ckpt_dir,
                             ckpt_every=cfg.ckpt_every or cfg.steps + 1)
+        # pass the (stream, key) pair rather than a prebuilt factory: the
+        # engine derives both the host factory and the in-scan sampler from
+        # it, so stepwise and chunked draw identical batches
         state, _, info = engine.train(
-            fns, ecfg, rcfg, batches=make_batch_factory(stream, key),
+            fns, ecfg, rcfg, stream=stream, data_key=key,
             init_key=k_init, batch_size=stream.batch_size,
             on_metrics=on_metrics)
     finally:

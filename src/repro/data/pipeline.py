@@ -77,6 +77,19 @@ def make_batch_iterator(stream: MRFSampleStream, seed: int = 0,
         step += 1
 
 
+def batch_at(stream: MRFSampleStream, key: jax.Array, step) -> dict:
+    """The seekable sampler itself: ``{"x", "y"}`` batch at a global step.
+
+    ``step`` may be a Python int (host dispatch) or a traced int32 scalar —
+    the batch key is ``fold_in(key, step)`` either way, so a chunked train
+    loop can synthesize batches *inside* ``lax.scan`` (zero steady-state
+    host->device transfers) and draw bit-identical data to the host path.
+    ``make_batch_factory`` routes through here so the two can never diverge.
+    """
+    x, y = sample_batch(stream, jax.random.fold_in(key, step))
+    return {"x": x, "y": y}
+
+
 def make_batch_factory(stream: MRFSampleStream,
                        key: jax.Array) -> Callable[[int], dict]:
     """Seekable deterministic batch factory — the ``ft.runner`` data contract.
@@ -86,8 +99,7 @@ def make_batch_factory(stream: MRFSampleStream,
     checkpoint-restart replays the stream exactly from the resume step.
     """
     def at(step: int) -> dict:
-        x, y = sample_batch(stream, jax.random.fold_in(key, step))
-        return {"x": x, "y": y}
+        return batch_at(stream, key, step)
     return at
 
 

@@ -155,8 +155,10 @@ class CheckpointManager:
         self._pending = None
         self._lock = threading.Lock()
 
-    def maybe_save(self, state, step: int) -> bool:
-        if step % self.every:
+    def maybe_save(self, state, step: int, *, force: bool = False) -> bool:
+        """Save if ``step`` is on the period — or unconditionally with
+        ``force`` (eviction snapshots land wherever the straggler fired)."""
+        if not force and step % self.every:
             return False
         self.wait()
         inner = save_state(state, self.dir, step, async_io=True)

@@ -9,9 +9,11 @@ rules — GSPMD moves the bytes.
 
 from __future__ import annotations
 
+import math
+
 import jax
 
-from repro.dist.sharding import AxisRules, param_shardings
+from repro.dist.sharding import AxisRules, make_compat_mesh, param_shardings
 
 
 def reshard_tree(tree, axes_tree, new_rules: AxisRules):
@@ -50,9 +52,7 @@ def downsize_batch_rules(rules: AxisRules, lost_hosts: int,
             f"({hosts_per_data_shard} hosts per data shard): a surviving "
             f"data shard would straddle a dead host")
     lost_shards = lost_hosts // hosts_per_data_shard
-    batch_axes = rules.rules.get("batch") or ("data",)
-    if isinstance(batch_axes, str):
-        batch_axes = (batch_axes,)
+    batch_axes = _batch_axes(rules)
     pool = 1
     for a in batch_axes:
         pool *= rules.mesh.shape.get(a, 1)
@@ -61,3 +61,56 @@ def downsize_batch_rules(rules: AxisRules, lost_hosts: int,
             f"evicting {lost_shards} batch shards empties the batch-shard "
             f"pool ({'x'.join(batch_axes)} had {pool})")
     return AxisRules(rules=dict(rules.rules), mesh=None)
+
+
+def _batch_axes(rules: AxisRules) -> tuple:
+    axes = rules.rules.get("batch") or ("data",)
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def survivor_mesh(live_devices, rules: AxisRules) -> AxisRules:
+    """Build the post-eviction mesh from the live device set and re-bind.
+
+    The automatic half of an eviction (``downsize_batch_rules`` validates it;
+    this constructs the result): every non-batch mesh axis keeps its original
+    extent — TP degree is baked into padded head counts, so the model axis
+    must survive intact — and the batch axes (``data``, or ``pod x data``
+    multi-pod) collapse into a single ``data`` axis sized by whatever the
+    survivors support.  Logical axes that mapped to any batch mesh axis
+    (``batch``, ``fsdp``) are remapped to the new ``data`` axis; everything
+    else keeps its mapping.  Collapsing ``pod`` is deliberate: after losing
+    part of a pod the survivor set has no meaningful DCN structure, and the
+    flat mapping is mesh-shape-independent, so the state reshards onto it via
+    ``reshard_tree`` without caring where the survivors physically live.
+    """
+    if rules.mesh is None:
+        raise ValueError("rules must be bound to the pre-eviction mesh")
+    live = list(live_devices)
+    if not live:
+        raise ValueError("no live devices to build a survivor mesh from")
+    if len(set(live)) != len(live):
+        raise ValueError("live_devices contains duplicates")
+    batch_axes = _batch_axes(rules)
+    keep_axes = [a for a in rules.mesh.axis_names if a not in batch_axes]
+    if "data" in keep_axes:
+        raise ValueError(
+            f"batch rule {batch_axes} does not cover the 'data' mesh axis; "
+            "survivor_mesh reserves 'data' for the collapsed batch axis")
+    keep_extent = math.prod(rules.mesh.shape[a] for a in keep_axes)
+    if len(live) % keep_extent != 0:
+        raise ValueError(
+            f"{len(live)} survivors do not tile the intact "
+            f"{'x'.join(keep_axes) or '(none)'} extent {keep_extent}: the "
+            f"eviction must remove whole batch shards "
+            f"(use downsize_batch_rules to validate the plan first)")
+    new_data = len(live) // keep_extent
+    mesh = make_compat_mesh((new_data, *(rules.mesh.shape[a] for a in keep_axes)),
+                            ("data", *keep_axes), devices=live)
+    remapped = {}
+    for name, phys in rules.rules.items():
+        phys_tuple = (phys,) if isinstance(phys, str) else (phys or ())
+        if any(a in batch_axes for a in phys_tuple):
+            remapped[name] = "data"
+        else:
+            remapped[name] = phys
+    return AxisRules(rules=remapped, mesh=mesh)

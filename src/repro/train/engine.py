@@ -1,4 +1,4 @@
-"""One training engine for the MRF nets.
+"""One training engine for the MRF nets — stepwise or chunked dispatch.
 
 The repo used to train the MRF net through three disjoint hand-rolled loops
 (core/train_loop for float/QAT, examples/mrf_fpga_train for the fused Pallas
@@ -19,8 +19,27 @@ Backends
                  (kernels/fused_train): forward + backprop + SGD inside one
                  pallas_call, the paper's actual contribution.
 
-``build(fns, cfg)`` returns ``(step_fn, init_state)``; ``train(...)`` is the
-one-call path the thin wrappers (core/train_loop, examples, benchmarks) use.
+Chunked execution
+-----------------
+For the <30k-param MRF net the per-step device work is microseconds, so the
+stepwise loop is dispatch-bound: one Python dispatch (and, with a metrics
+callback, one blocking host sync) per step.  ``chunk_steps > 1`` switches
+the engine to chunked dispatch: ``lax.scan`` over ``chunk_steps`` train
+steps inside one jitted, state-donating call, with batches synthesized
+*inside* the scan by folding the global step index into the stream key
+(``data/pipeline.batch_at`` — the same sampler the stepwise factory uses,
+so both paths draw identical batches and the seekable-by-step restart
+contract is preserved).  Per-step metrics come back stacked and are fetched
+once per chunk, asynchronously (the runner dispatches chunk N+1 before
+syncing chunk N's metrics).  Chunked is **bit-identical** to stepwise for
+every backend — same final ``TrainState``, same per-step losses — making it
+a pure performance change (guarded by tests/test_chunked_training.py).
+
+``build(fns, cfg)`` returns ``(step_fn, init_state)``;
+``build_chunked(fns, cfg, stream, data_key)`` returns the chunk dispatcher
+``chunk_fn(state, start, n)``; ``train(...)`` is the one-call path the thin
+wrappers (core/train_loop, examples, benchmarks) use and selects the mode
+from ``cfg.chunk_steps``.
 """
 
 from __future__ import annotations
@@ -32,13 +51,15 @@ from typing import Any, Callable
 import jax
 
 from repro.data.epg import default_sequence
-from repro.data.pipeline import MRFSampleStream, make_batch_factory
+from repro.data.pipeline import MRFSampleStream, batch_at, make_batch_factory
+from repro.ft.checkpoint import latest_step
 from repro.ft.runner import RunnerConfig, run
 from repro.kernels.fused_train import ops as fused_ops
 from repro.models import mrf as mrf_model
 from repro.models.lm import ModelFns
 from repro.optim import adam, sgd
-from repro.train.step import TrainState, init_train_state, make_train_step
+from repro.train.step import (TrainState, init_train_state, make_chunked_step,
+                              make_train_step)
 
 BACKENDS = ("float", "qat-int8", "fused-pallas")
 
@@ -57,9 +78,14 @@ class EngineConfig:
     tile_batch: int = 128
     interpret: bool | None = None
     donate: bool = True
+    # chunk_steps=1 is the stepwise loop; >1 dispatches lax.scan chunks with
+    # in-scan batch synthesis (bit-identical, dispatch-bound loops only pay
+    # one Python dispatch + one async metrics fetch per chunk).
+    chunk_steps: int = 1
 
     def __post_init__(self):
         assert self.backend in BACKENDS, (self.backend, BACKENDS)
+        assert self.chunk_steps >= 1, self.chunk_steps
         if self.backend == "fused-pallas":
             # the kernel is a whole-step SGD update: there is no grad pytree
             # to accumulate or compress, so these knobs would be silent lies
@@ -68,12 +94,10 @@ class EngineConfig:
                 "grad_compress do not apply")
 
 
-def build(fns: ModelFns, cfg: EngineConfig
-          ) -> tuple[Callable, Callable[[jax.Array], TrainState]]:
-    """(jitted step conforming to ``(state, batch) -> (state, metrics)``,
-    ``init_state(key) -> TrainState``) for any backend."""
-    opt = adam(cfg.lr) if cfg.optimizer == "adam" else sgd(cfg.lr)
-
+def _backend_step(fns: ModelFns, cfg: EngineConfig, opt):
+    """(un-jitted ``(state, batch) -> (state, metrics)`` step, aux factory)
+    for ``cfg.backend`` — the shared core of ``build`` and ``build_chunked``,
+    so stepwise and chunked run literally the same step function."""
     if cfg.backend == "fused-pallas":
         # SGD lives inside the kernel; ``opt`` only shapes the (unused)
         # optimizer slots so the TrainState pytree is backend-uniform.
@@ -94,15 +118,45 @@ def build(fns: ModelFns, cfg: EngineConfig
             fns.loss, opt, microbatches=cfg.microbatches,
             max_grad_norm=cfg.max_grad_norm, grad_compress=cfg.grad_compress)
         aux_of = lambda params: None
+    return step, aux_of
 
-    jit_step = jax.jit(step, donate_argnums=(0,) if cfg.donate else ())
 
+def _make_init(fns: ModelFns, cfg: EngineConfig, opt, aux_of):
     def init_state(key: jax.Array) -> TrainState:
         params = fns.init(key)
         return init_train_state(params, opt, grad_compress=cfg.grad_compress,
                                 aux=aux_of(params))
+    return init_state
 
-    return jit_step, init_state
+
+def build(fns: ModelFns, cfg: EngineConfig
+          ) -> tuple[Callable, Callable[[jax.Array], TrainState]]:
+    """(jitted step conforming to ``(state, batch) -> (state, metrics)``,
+    ``init_state(key) -> TrainState``) for any backend."""
+    opt = adam(cfg.lr) if cfg.optimizer == "adam" else sgd(cfg.lr)
+    step, aux_of = _backend_step(fns, cfg, opt)
+    jit_step = jax.jit(step, donate_argnums=(0,) if cfg.donate else ())
+    return jit_step, _make_init(fns, cfg, opt, aux_of)
+
+
+def build_chunked(fns: ModelFns, cfg: EngineConfig, stream: MRFSampleStream,
+                  data_key: jax.Array
+                  ) -> tuple[Callable, Callable[[jax.Array], TrainState]]:
+    """(jitted ``chunk_fn(state, start, n) -> (state, stacked_metrics)``,
+    ``init_state``) — the chunked dispatcher for any backend.
+
+    ``n`` steps run inside one ``lax.scan``; batches are synthesized
+    on-device from ``batch_at(stream, data_key, start + i)`` so the chunk
+    draws exactly the batches the stepwise factory would.  ``n`` is static
+    (the final ragged chunk compiles once at its own length); ``start`` is a
+    traced scalar, so chunk dispatches never recompile as the run advances.
+    """
+    opt = adam(cfg.lr) if cfg.optimizer == "adam" else sgd(cfg.lr)
+    step, aux_of = _backend_step(fns, cfg, opt)
+    chunk = make_chunked_step(step, lambda s: batch_at(stream, data_key, s))
+    jit_chunk = jax.jit(chunk, static_argnums=(2,),
+                        donate_argnums=(0,) if cfg.donate else ())
+    return jit_chunk, _make_init(fns, cfg, opt, aux_of)
 
 
 def default_stream(model_cfg, batch_size: int) -> MRFSampleStream:
@@ -119,31 +173,59 @@ def train(fns: ModelFns, engine_cfg: EngineConfig, runner_cfg: RunnerConfig,
 
     Returns ``(state, step, info)`` where info carries wall-clock seconds and
     the samples/s throughput.  ``batches`` (a seekable ``step -> batch``
-    factory) overrides the default stream+key construction.
+    factory) overrides the default stream+key construction — stepwise mode
+    only: chunked runs synthesize batches on-device and need the
+    ``stream``/``data_key`` pair itself.
     """
-    if batches is None:
-        if stream is None:
-            stream = default_stream(fns.cfg, batch_size)
-        if data_key is None:
-            data_key = jax.random.PRNGKey(1)
-        batches = make_batch_factory(stream, data_key)
+    chunked = engine_cfg.chunk_steps > 1
+    if chunked and batches is not None:
+        raise ValueError(
+            "chunk_steps > 1 synthesizes batches on-device inside the scan: "
+            "pass the (stream, data_key) pair instead of a host batches "
+            "factory, so the data source is unambiguous and the chunked and "
+            "stepwise paths draw identical batches")
+    def stream_and_key():
+        return (stream if stream is not None
+                else default_stream(fns.cfg, batch_size),
+                data_key if data_key is not None else jax.random.PRNGKey(1))
+
+    if chunked:
+        stream, data_key = stream_and_key()
+        step_fn = None  # the chunked runner never consults the stepwise path
+        chunk_fn, init_state = build_chunked(fns, engine_cfg, stream, data_key)
         batch_size = stream.batch_size
-    step_fn, init_state = build(fns, engine_cfg)
+    else:
+        chunk_fn = None
+        step_fn, init_state = build(fns, engine_cfg)
+        if batches is None:
+            stream, data_key = stream_and_key()
+            batches = make_batch_factory(stream, data_key)
+            batch_size = stream.batch_size
     state0 = init_state(init_key if init_key is not None
                         else jax.random.PRNGKey(0))
 
+    resume0 = latest_step(runner_cfg.ckpt_dir) or 0
     executed = 0  # steps run THIS invocation (a resume skips earlier ones)
 
-    def count_metrics(step, metrics, dt):
-        nonlocal executed
-        executed += 1
-        if on_metrics:
+    count_metrics = None
+    if on_metrics is not None:
+        def count_metrics(step, metrics, dt):
+            nonlocal executed
+            executed += 1
             on_metrics(step, metrics, dt)
 
     t0 = time.perf_counter()
     state, step = run(step_fn, state0, batches, runner_cfg,
-                      shardings=shardings, on_metrics=count_metrics)
+                      shardings=shardings, on_metrics=count_metrics,
+                      chunk_fn=chunk_fn, chunk_steps=engine_cfg.chunk_steps)
     wall = time.perf_counter() - t0
+    if on_metrics is None:
+        # no callback -> the runner skipped per-step syncs and we never saw
+        # per-step ticks; progress-from-resume is the executed count.  Note
+        # this omits steps re-executed after a mid-run crash/restart (wall
+        # still includes them) — register a callback for exact throughput
+        # accounting under fault injection.
+        executed = step - resume0
     info = {"wall_seconds": wall, "steps_executed": executed,
             "samples_per_s": executed * batch_size / max(wall, 1e-9)}
     return state, step, info

@@ -24,6 +24,11 @@ through; the backend plugs in at one of two levels:
   computed *on the accelerator* (kernels/fused_train), where grads never
   materialise in HBM.  The factory wraps it into the same
   ``(state, batch) -> (state, metrics)`` contract.
+
+Every step the factory returns is *scan-compatible*: the whole
+``TrainState`` — including the backend ``aux`` (QAT observers) — is the
+scan carry, so ``make_chunked_step`` can fold ``n`` steps into one
+``lax.scan`` dispatch with per-step metrics stacked on the scan output.
 """
 
 from __future__ import annotations
@@ -125,3 +130,29 @@ def make_train_step(loss_fn, opt: Optimizer, *, microbatches: int = 1,
         return new_state, {"loss": loss, "grad_norm": gnorm}
 
     return train_step
+
+
+def make_chunked_step(train_step, batch_at):
+    """Fold ``n`` train steps into one ``lax.scan`` dispatch.
+
+    ``train_step``: any ``(state, batch) -> (state, metrics)`` from
+    ``make_train_step`` (all three backends qualify — the carry is the full
+    ``TrainState`` incl. ``aux``, and the fused-pallas whole-step kernel
+    traces under scan like any other jax op).
+    ``batch_at``: ``step -> batch`` with a *traced* int32 step — batches are
+    synthesized on-device inside the scan, so a chunk moves zero bytes
+    host->device and pays one Python dispatch for ``n`` steps.
+
+    Returns ``chunk_step(state, start, n) -> (state, metrics)`` where
+    ``metrics`` leaves are stacked ``(n, ...)`` per-step values — identical,
+    element for element, to what ``n`` stepwise calls would have produced
+    (``start`` is the global step of the chunk's first step, so the
+    seekable-by-step data contract survives restarts).  ``n`` must be static
+    (each distinct chunk length compiles once).
+    """
+    def chunk_step(state: TrainState, start, n: int):
+        def body(carry, offset):
+            new_state, metrics = train_step(carry, batch_at(start + offset))
+            return new_state, metrics
+        return jax.lax.scan(body, state, jnp.arange(n, dtype=jnp.int32))
+    return chunk_step
