@@ -1,0 +1,22 @@
+#!/usr/bin/env python
+"""CI entry point for jaxlint (stdlib-only, no jax needed).
+
+Usage, from anywhere in the repo:
+
+    python scripts/check_lints.py                  # lint src/, exit 1 on
+                                                   # unsuppressed findings
+    python scripts/check_lints.py --github         # ::error annotations
+    python scripts/check_lints.py --report dead-exports   # informational
+    python scripts/check_lints.py --list-rules
+"""
+
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.tools.jaxlint import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main(repo_root=REPO_ROOT))

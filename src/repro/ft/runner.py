@@ -131,7 +131,7 @@ def _stepwise_loop(train_step, state, step, batches, cfg, mgr, monitor, *,
             return state, None
         state, metrics = train_step(state, batch)
         if sync_each_step:
-            jax.block_until_ready(metrics["loss"])
+            jax.block_until_ready(metrics["loss"])  # jaxlint: disable=HOSTSYNC -- opt-in sync_each_step mode exists to measure true per-step latency
         # without a callback, dt is dispatch time only (async steps); the
         # straggler EWMA then watches dispatch latency, documented above
         dt = time.perf_counter() - t0
@@ -142,7 +142,7 @@ def _stepwise_loop(train_step, state, step, batches, cfg, mgr, monitor, *,
         mgr.maybe_save(state, step)  # device->host snapshot = a sync point
         if on_metrics:
             on_metrics(step, metrics, dt)
-    jax.block_until_ready(state)  # loop exit: the promised final sync
+    jax.block_until_ready(state)  # jaxlint: disable=HOSTSYNC -- loop exit: the promised final sync, once per run
     return state, step
 
 
@@ -197,6 +197,6 @@ def _chunked_loop(chunk_fn, state, step, cfg, mgr, monitor, *, on_metrics,
             mgr.maybe_save(state, step)
     if inflight is not None:
         retire(inflight)
-    jax.block_until_ready(state)
+    jax.block_until_ready(state)  # jaxlint: disable=HOSTSYNC -- chunked-loop exit: one final sync after the last chunk retires
     mgr.maybe_save(state, step)
     return state, step

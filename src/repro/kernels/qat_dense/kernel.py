@@ -75,8 +75,8 @@ def qat_dense_call(x_q, w_q, b_q, scale, *, relu: bool = True,
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
-            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),  # jaxlint: disable=PALLASTILE -- per-channel scale is a single broadcast row; padding it is one sublane tile
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),  # jaxlint: disable=PALLASTILE -- bias is a single broadcast row; padding it is one sublane tile
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),

@@ -8,9 +8,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.dist.sharding import shard
+
 
 def make_prefill_step(fns):
     def prefill_step(params, batch):
+        batch = shard(batch, "batch", None)  # (B, S) prompts, data-parallel
         cache, logits = fns.prefill(params, batch)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return cache, next_tok, logits
@@ -24,6 +27,7 @@ def make_serve_step(fns, *, temperature: float = 0.0):
     One new token with a KV cache of seq_len — the assigned decode cells."""
 
     def serve_step(params, cache, tokens, cache_len, key=None):
+        tokens = shard(tokens, "batch")  # (B,) current tokens, data-parallel
         logits, cache = fns.decode(params, cache, tokens, cache_len)
         if temperature > 0.0 and key is not None:
             next_tok = jax.random.categorical(key, logits / temperature, -1)

@@ -1,0 +1,36 @@
+"""jaxlint: static analysis of the repo's jit/sharding/Pallas contracts.
+
+The dispatch-efficiency invariants this repo's speedups rest on — no host
+syncs on the hot loop, no Python branches on tracers, no reads of donated
+buffers, batch axes routed through ``dist.shard``, MXU-aligned Pallas
+blocks inside the VMEM budget — were, until this checker, enforced only by
+convention and hand-audit.  Each was a bug class some PR actually had to
+fix by hand (per-token ``np.asarray`` in the decode loop, per-tile
+``block_until_ready`` in serving, tile shapes the CPU interpreter
+tolerates but Mosaic pads).  This package walks the source with stdlib
+``ast`` (no code is executed, no jax import is needed — the CI lint job
+runs dependency-free) and turns each class into a registered rule, the
+same way ``repro.tools.import_integrity`` turned the missing-subsystem
+regression into a checker.
+
+Rules (see ``repro/tools/jaxlint/rules/``): HOSTSYNC, TRACERBRANCH,
+DONATE, SHARD, PALLASTILE.  Suppress a finding in place with a reasoned
+pragma on its line::
+
+    x = np.asarray(y)  # jaxlint: disable=HOSTSYNC -- sanctioned sync point
+
+A pragma without a ``-- reason`` is inert and itself a finding.
+
+Run via ``scripts/check_lints.py`` (CI, ``--github`` for inline PR
+annotations, ``--report dead-exports`` for the dormant-API inventory) or
+``tests/test_jaxlint.py`` (tier-1: zero unsuppressed findings over src/).
+"""
+
+from repro.tools.jaxlint.core import (Finding, LintConfig, PRAGMA_RULE,  # noqa: F401
+                                      RULES, available_rules,
+                                      collect_findings, lint_repo,
+                                      lint_source, main, parse_pragmas,
+                                      register)
+from repro.tools.jaxlint.deadexports import (dead_exports,  # noqa: F401
+                                             dead_exports_report)
+from repro.tools.jaxlint import rules  # noqa: F401  (registers the rules)

@@ -1,0 +1,247 @@
+"""Shared AST plumbing for the jaxlint rules.
+
+Everything here is pure ``ast`` bookkeeping: dotted-name rendering,
+``functools.partial`` unwrapping, literal extraction, qualified-name /
+parent maps, and the traced-function discovery that TRACERBRANCH and
+DONATE share (which FunctionDefs end up under a ``jax.jit`` or
+``pl.pallas_call`` trace, and which of their parameters are traced values
+vs static arguments).  No code is executed and no jax import is needed —
+the linter must run in the dependency-free CI lint job.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+
+def dotted(node: ast.AST) -> str | None:
+    """Render ``a.b.c`` for Name/Attribute chains; None for anything else."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def is_jit_expr(node: ast.AST) -> bool:
+    """True for ``jit`` / ``jax.jit`` (any prefix ending in ``.jit``)."""
+    d = dotted(node)
+    return d == "jit" or (d is not None and d.endswith(".jit"))
+
+
+def is_partial_expr(node: ast.AST) -> bool:
+    d = dotted(node)
+    return d == "partial" or (d is not None and d.endswith(".partial"))
+
+
+def unwrap_partial(node: ast.AST) -> tuple[ast.AST | None, list]:
+    """``functools.partial(f, ...)`` -> ``(f, keywords)``; else (None, [])."""
+    if (isinstance(node, ast.Call) and is_partial_expr(node.func)
+            and node.args):
+        return node.args[0], node.keywords
+    return None, []
+
+
+def literal_strings(node: ast.AST | None) -> list[str]:
+    """String literals out of ``"a"`` / ``("a", "b")`` / ``["a"]``."""
+    if node is None:
+        return []
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+def literal_ints(node: ast.AST | None) -> list[int]:
+    """Int literals out of ``0`` / ``(0, 1)`` / ``[0]``; for conditional
+    expressions (``(0,) if flag else ()``) the union of both branches —
+    a "may donate / may be static" over-approximation."""
+    if node is None:
+        return []
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            out.extend(literal_ints(e))
+        return out
+    if isinstance(node, ast.IfExp):
+        return literal_ints(node.body) + literal_ints(node.orelse)
+    return []
+
+
+def kw(keywords: Iterable, name: str) -> ast.AST | None:
+    for k in keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def parent_map(tree: ast.AST) -> dict:
+    parents: dict = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def qualname_map(tree: ast.AST) -> dict:
+    """FunctionDef/ClassDef node -> dotted qualname (``Cls.meth``,
+    ``outer.inner`` — no ``<locals>`` noise)."""
+    out: dict = {}
+
+    def visit(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                qual = f"{prefix}.{child.name}" if prefix else child.name
+                out[child] = qual
+                visit(child, qual)
+            else:
+                visit(child, prefix)
+
+    visit(tree, "")
+    return out
+
+
+def positional_params(fn: ast.AST) -> list[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args)]
+
+
+def all_params(fn: ast.AST) -> list[str]:
+    a = fn.args
+    names = positional_params(fn) + [p.arg for p in a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def int_defaults(fn: ast.AST) -> dict[str, int]:
+    """Param name -> int literal default, for positional and kw-only args."""
+    a = fn.args
+    env: dict[str, int] = {}
+    pos = [*a.posonlyargs, *a.args]
+    for p, d in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        if (isinstance(d, ast.Constant) and isinstance(d.value, int)
+                and not isinstance(d.value, bool)):
+            env[p.arg] = d.value
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if (d is not None and isinstance(d, ast.Constant)
+                and isinstance(d.value, int)
+                and not isinstance(d.value, bool)):
+            env[p.arg] = d.value
+    return env
+
+
+def module_int_constants(tree: ast.Module) -> dict[str, int]:
+    """Top-level ``NAME = <int>`` assignments (e.g. ``PAD = 128``)."""
+    env: dict[str, int] = {}
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            vals = literal_ints(stmt.value)
+            if len(vals) == 1 and isinstance(stmt.value, ast.Constant):
+                env[stmt.targets[0].id] = vals[0]
+    return env
+
+
+def _functions_by_name(tree: ast.AST) -> dict[str, list]:
+    by_name: dict[str, list] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(node.name, []).append(node)
+    return by_name
+
+
+def _partial_aliases(tree: ast.AST) -> dict[str, str]:
+    """``kern = functools.partial(_kernel, ...)`` -> {"kern": "_kernel"}."""
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            inner, _ = unwrap_partial(node.value)
+            if isinstance(inner, ast.Name):
+                out[node.targets[0].id] = inner.id
+    return out
+
+
+def _jit_taint(fn, static_names, static_nums) -> set[str]:
+    pos = positional_params(fn)
+    tainted = set(pos) | {p.arg for p in fn.args.kwonlyargs}
+    tainted -= set(static_names)
+    for i in static_nums:
+        if 0 <= i < len(pos):
+            tainted.discard(pos[i])
+    tainted.discard("self")
+    return tainted
+
+
+def traced_functions(tree: ast.AST) -> dict:
+    """FunctionDef -> set of traced (tainted) parameter names.
+
+    A function counts as traced when it is (a) decorated with ``jax.jit`` /
+    ``functools.partial(jax.jit, ...)``, (b) named as the first argument of
+    a ``jit(...)`` call anywhere in the module, or (c) the kernel of a
+    ``pl.pallas_call`` (directly, through ``functools.partial``, or through
+    a one-hop local ``kern = partial(_kernel, ...)`` alias).  Parameters
+    named by ``static_argnames``/``static_argnums`` are not traced; for
+    Pallas kernels only the positional Ref parameters are traced
+    (keyword-only params are bound statically via ``functools.partial``).
+
+    Resolution is name-based and module-local: a function jitted from
+    another module is invisible here (the jit site is linted in *its*
+    module), which keeps the pass O(file) and false-positive-averse.
+    """
+    by_name = _functions_by_name(tree)
+    aliases = _partial_aliases(tree)
+    traced: dict = {}
+
+    def mark(fn, tainted):
+        traced[fn] = traced.get(fn, set()) | tainted
+
+    def mark_jit(fn, keywords):
+        static_names = literal_strings(kw(keywords, "static_argnames"))
+        static_nums = literal_ints(kw(keywords, "static_argnums"))
+        mark(fn, _jit_taint(fn, static_names, static_nums))
+
+    def resolve(node) -> list:
+        """Candidate FunctionDefs for a callable expression."""
+        inner, _ = unwrap_partial(node)
+        if inner is not None:
+            node = inner
+        if isinstance(node, ast.Name):
+            name = aliases.get(node.id, node.id)
+            return by_name.get(name, [])
+        return []
+
+    for fns in by_name.values():
+        for fn in fns:
+            for dec in fn.decorator_list:
+                if is_jit_expr(dec):                      # @jax.jit
+                    mark_jit(fn, [])
+                elif isinstance(dec, ast.Call):
+                    inner, kws = unwrap_partial(dec)
+                    if inner is not None and is_jit_expr(inner):
+                        mark_jit(fn, kws)                 # @partial(jax.jit)
+                    elif is_jit_expr(dec.func):
+                        mark_jit(fn, dec.keywords)        # @jax.jit(...)
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or not node.args:
+            continue
+        if is_jit_expr(node.func):                        # jax.jit(f, ...)
+            for fn in resolve(node.args[0]):
+                mark_jit(fn, node.keywords)
+        d = dotted(node.func)
+        if d is not None and d.endswith("pallas_call"):   # pl.pallas_call(k)
+            for fn in resolve(node.args[0]):
+                mark(fn, set(positional_params(fn)))
+    return traced

@@ -1,0 +1,304 @@
+"""jaxlint core: findings, rule registry, pragma handling, and the runner.
+
+A *rule* is a function ``check(ctx) -> Iterable[Finding]`` registered under
+an UPPERCASE name via :func:`register`; ``ctx`` is a :class:`FileContext`
+carrying the parsed tree, the config, and shared maps (qualnames, parents,
+module int constants).  The runner parses each file once, runs every rule,
+then applies per-line pragmas:
+
+    x = np.asarray(y)  # jaxlint: disable=HOSTSYNC -- sanctioned sync point
+
+A pragma suppresses the named rule(s) on its own line **only when it
+carries a trailing ``-- reason``** — a bare ``disable=RULE`` is inert and
+itself reported as a PRAGMA finding, as is a pragma naming an unknown
+rule.  PRAGMA findings cannot be suppressed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import pathlib
+import re
+from typing import Callable, Iterable
+
+#: hot-loop modules: HOSTSYNC applies only here (module-relative paths)
+HOT_LOOP_MODULES = (
+    "repro/ft/runner.py",
+    "repro/serve/executor.py",
+    "repro/serve/decode.py",
+    "repro/train/step.py",
+)
+
+#: sanctioned sync points per hot-loop module: qualname prefixes where a
+#: host sync is the *designed* behaviour (the one-fetch-per-chunk retire,
+#: the one-sync-per-wave waits).  Everything else needs a fix or a pragma.
+SYNC_ALLOWLIST = {
+    "repro/ft/runner.py": ("_chunked_loop.retire",),
+    "repro/serve/executor.py": ("InflightWave.wait", "InflightWave.wait_tiles"),
+}
+
+#: parameter names that mark a public entry point as batch-bearing (SHARD)
+BATCH_PARAM_NAMES = ("batch", "batches", "tokens", "features",
+                     "features_list", "fingerprints", "voxels")
+
+#: dtype attribute name -> bytes, for the PALLASTILE VMEM estimate
+DTYPE_BYTES = {"float64": 8, "int64": 8, "float32": 4, "int32": 4,
+               "uint32": 4, "bfloat16": 2, "float16": 2, "int16": 2,
+               "int8": 1, "uint8": 1, "bool_": 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class LintConfig:
+    hot_loop_modules: tuple = HOT_LOOP_MODULES
+    sync_allowlist: dict = dataclasses.field(
+        default_factory=lambda: dict(SYNC_ALLOWLIST))
+    batch_param_names: tuple = BATCH_PARAM_NAMES
+    #: modules whose public entry points the SHARD rule audits
+    shard_module_prefixes: tuple = ("repro/serve/", "repro/train/")
+    #: files the PALLASTILE rule audits
+    kernel_path_prefix: str = "repro/kernels/"
+    kernel_file_suffix: str = "kernel.py"
+    #: TPU tiling contract: last dim % lane, second-to-last % sublane
+    lane: int = 128
+    sublane: int = 8
+    #: per-pallas_call VMEM budget (~16 MB/core on current TPUs); the
+    #: estimate is a lower bound (unresolvable dims contribute nothing)
+    vmem_cap_bytes: int = 16 * 1024 * 1024
+    #: bytes assumed for BlockSpec blocks whose dtype is not statically
+    #: visible (scratch pltpu.VMEM(...) carries its dtype; operands don't)
+    default_dtype_bytes: int = 4
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    path: str      # as given to the linter (repo-relative for repo scans)
+    line: int
+    rule: str
+    message: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.path}:{self.line} {self.rule} {self.message}"
+
+    def github(self) -> str:
+        """GitHub workflow-command annotation (inline on PR diffs)."""
+        return (f"::error file={self.path},line={self.line},"
+                f"title=jaxlint {self.rule}::{self.message}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    summary: str
+    check: Callable
+
+
+RULES: dict[str, Rule] = {}
+
+#: reserved name for pragma-syntax findings (not a registered rule: it has
+#: no check function and can never be suppressed)
+PRAGMA_RULE = "PRAGMA"
+
+
+def register(name: str, summary: str):
+    """Class/function decorator adding a rule to the registry.
+
+    Adding a rule == writing one ``check(ctx)`` generator, registering it
+    here, and dropping a positive + negative fixture pair under
+    ``tests/fixtures/jaxlint/`` (test_jaxlint enforces the pairing).
+    """
+    if name != name.upper() or name == PRAGMA_RULE:
+        raise ValueError(f"rule names are UPPERCASE and != PRAGMA: {name!r}")
+
+    def deco(fn):
+        if name in RULES:
+            raise ValueError(f"duplicate rule {name}")
+        RULES[name] = Rule(name=name, summary=summary, check=fn)
+        return fn
+
+    return deco
+
+
+def available_rules() -> dict[str, str]:
+    _load_rules()
+    return {r.name: r.summary for r in RULES.values()}
+
+
+class FileContext:
+    """One parsed file + the shared maps rules keep re-deriving."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module,
+                 config: LintConfig):
+        self.path = path
+        #: path rules match against (repo prefix ``src/`` stripped)
+        self.module_path = path[4:] if path.startswith("src/") else path
+        self.source = source
+        self.tree = tree
+        self.config = config
+        self._qualnames = None
+        self._parents = None
+        self._constants = None
+
+    @property
+    def qualnames(self) -> dict:
+        if self._qualnames is None:
+            from repro.tools.jaxlint.astutil import qualname_map
+            self._qualnames = qualname_map(self.tree)
+        return self._qualnames
+
+    @property
+    def parents(self) -> dict:
+        if self._parents is None:
+            from repro.tools.jaxlint.astutil import parent_map
+            self._parents = parent_map(self.tree)
+        return self._parents
+
+    @property
+    def int_constants(self) -> dict[str, int]:
+        if self._constants is None:
+            from repro.tools.jaxlint.astutil import module_int_constants
+            self._constants = module_int_constants(self.tree)
+        return self._constants
+
+    def enclosing_function(self, node: ast.AST):
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def qualname_of(self, node: ast.AST) -> str:
+        """Qualname of the function enclosing ``node`` ('' at module level)."""
+        fn = node if isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)) \
+            else self.enclosing_function(node)
+        return self.qualnames.get(fn, "") if fn is not None else ""
+
+    def finding(self, node_or_line, rule: str, message: str) -> Finding:
+        line = node_or_line if isinstance(node_or_line, int) \
+            else node_or_line.lineno
+        return Finding(path=self.path, line=line, rule=rule, message=message)
+
+
+_PRAGMA_RE = re.compile(
+    r"#\s*jaxlint:\s*disable=([A-Za-z0-9_,\s]+?)(?:\s*--\s*(\S.*))?\s*$")
+
+
+def parse_pragmas(source: str, path: str
+                  ) -> tuple[dict[int, set], list[Finding]]:
+    """(line -> suppressed rule names, pragma-syntax findings).
+
+    A pragma only suppresses when it names known rules AND carries a
+    ``-- reason``; offenders become PRAGMA findings instead.
+    """
+    _load_rules()
+    suppress: dict[int, set] = {}
+    problems: list[Finding] = []
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA_RE.search(text)
+        if not m:
+            continue
+        names = {n.strip().upper() for n in m.group(1).split(",") if n.strip()}
+        reason = m.group(2)
+        unknown = sorted(n for n in names if n not in RULES)
+        if unknown:
+            problems.append(Finding(
+                path, i, PRAGMA_RULE,
+                f"pragma names unknown rule(s) {', '.join(unknown)} "
+                f"(known: {', '.join(sorted(RULES))})"))
+        if not reason:
+            problems.append(Finding(
+                path, i, PRAGMA_RULE,
+                "pragma carries no reason — write `# jaxlint: "
+                "disable=RULE -- why this line is exempt`"))
+            continue  # reasonless pragmas are inert
+        suppress.setdefault(i, set()).update(names - set(unknown))
+    return suppress, problems
+
+
+def _load_rules() -> None:
+    # rule modules self-register on import; deferred to avoid a cycle
+    # (rules import Finding/register from here)
+    from repro.tools.jaxlint import rules  # noqa: F401
+
+
+def collect_findings(source: str, path: str,
+                     config: LintConfig | None = None) -> list[Finding]:
+    """Raw rule findings for one source blob — pragmas NOT applied."""
+    _load_rules()
+    config = config or LintConfig()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 1, "SYNTAX",
+                        f"syntax error prevents linting ({e.msg})")]
+    ctx = FileContext(path, source, tree, config)
+    out: list[Finding] = []
+    for rule in RULES.values():
+        out.extend(rule.check(ctx))
+    return out
+
+
+def lint_source(source: str, path: str,
+                config: LintConfig | None = None) -> list[Finding]:
+    """Unsuppressed findings (rule findings minus reasoned pragmas, plus
+    pragma-syntax findings)."""
+    raw = collect_findings(source, path, config)
+    suppress, problems = parse_pragmas(source, path)
+    kept = [f for f in raw if f.rule not in suppress.get(f.line, set())]
+    return sorted(kept + problems)
+
+
+def iter_repo_files(repo_root: pathlib.Path) -> Iterable[pathlib.Path]:
+    src = pathlib.Path(repo_root) / "src"
+    if src.is_dir():
+        yield from sorted(src.rglob("*.py"))
+
+
+def lint_repo(repo_root, config: LintConfig | None = None) -> list[Finding]:
+    """Lint every python file under ``<repo_root>/src``."""
+    repo_root = pathlib.Path(repo_root)
+    findings: list[Finding] = []
+    for py in iter_repo_files(repo_root):
+        rel = py.relative_to(repo_root).as_posix()
+        findings.extend(lint_source(py.read_text(), rel, config))
+    return sorted(findings)
+
+
+def main(argv=None, repo_root: pathlib.Path | None = None) -> int:
+    if repo_root is None:
+        repo_root = pathlib.Path(__file__).resolve().parents[4]
+    ap = argparse.ArgumentParser(
+        prog="jaxlint",
+        description="static analysis of the repo's jit/sharding/Pallas "
+                    "performance contracts")
+    ap.add_argument("--report", choices=("dead-exports",),
+                    help="emit an informational report instead of linting")
+    ap.add_argument("--github", action="store_true",
+                    help="print findings as GitHub ::error annotations")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name, summary in sorted(available_rules().items()):
+            print(f"{name:13s} {summary}")
+        return 0
+
+    if args.report == "dead-exports":
+        from repro.tools.jaxlint.deadexports import dead_exports_report
+        for line in dead_exports_report(repo_root):
+            print(line)
+        return 0
+
+    findings = lint_repo(repo_root)
+    if findings:
+        print(f"jaxlint: {len(findings)} unsuppressed finding(s):")
+        for f in findings:
+            print(f.github() if args.github else f"  {f.key}")
+        return 1
+    n_files = sum(1 for _ in iter_repo_files(repo_root))
+    print(f"jaxlint: clean ({n_files} files, {len(available_rules())} rules)")
+    return 0

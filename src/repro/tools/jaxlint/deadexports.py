@@ -1,0 +1,127 @@
+"""Dead-public-API inventory: ``jaxlint --report dead-exports``.
+
+Lists public symbols defined under ``src/repro`` that no other file in the
+repo references, plus modules nothing imports.  This is a *report*, not a
+lint failure: dormant subsystems (``analysis/roofline`` driving the int8
+kernel sprint, ``optim/grad_compression`` awaiting the data-parallel
+gradient exchange) are named ROADMAP work — the report keeps them visible
+instead of letting them rot silently or forcing their deletion.
+
+Conservativeness: usage is identifier-based (any ``Name`` load, attribute
+access, or ``from X import name`` anywhere in the scan dirs counts), so a
+same-named symbol elsewhere keeps a dead one "alive" — the report
+under-counts, it never over-counts.  Re-export lines in ``__init__.py``
+files do NOT count as usage (they are API surface, not use), so a symbol
+that is only ever re-exported still shows up.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.tools.import_integrity import SCAN_DIRS
+
+
+def _public_symbols(src_root: pathlib.Path):
+    """Yield (module, name, lineno, file) for public top-level defs."""
+    for py in sorted((src_root / "repro").rglob("*.py")):
+        if py.name == "__init__.py":
+            continue  # __init__ contents are re-export surface
+        module = ".".join(py.relative_to(src_root).with_suffix("").parts)
+        try:
+            tree = ast.parse(py.read_text())
+        except SyntaxError:
+            continue
+        for stmt in tree.body:
+            names: list[tuple[str, int]] = []
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                names.append((stmt.name, stmt.lineno))
+            elif isinstance(stmt, ast.Assign):
+                names.extend((t.id, t.lineno) for t in stmt.targets
+                             if isinstance(t, ast.Name))
+            elif isinstance(stmt, ast.AnnAssign) and \
+                    isinstance(stmt.target, ast.Name):
+                names.append((stmt.target.id, stmt.lineno))
+            for name, lineno in names:
+                if not name.startswith("_"):
+                    yield module, name, lineno, py
+
+
+def _usages(repo_root: pathlib.Path):
+    """(identifiers used per file, modules imported anywhere)."""
+    used_by_file: dict[pathlib.Path, set] = {}
+    imported_modules: set[str] = set()
+    for scan in SCAN_DIRS:
+        base = repo_root / scan
+        if not base.is_dir():
+            continue
+        for py in sorted(base.rglob("*.py")):
+            try:
+                tree = ast.parse(py.read_text())
+            except SyntaxError:
+                continue
+            used: set[str] = set()
+            is_init = py.name == "__init__.py"
+            for node in ast.walk(tree):
+                if isinstance(node, ast.Name):
+                    used.add(node.id)
+                elif isinstance(node, ast.Attribute):
+                    used.add(node.attr)
+                elif isinstance(node, ast.Import):
+                    for a in node.names:
+                        imported_modules.add(a.name)
+                elif isinstance(node, ast.ImportFrom) and node.level == 0:
+                    mod = node.module or ""
+                    imported_modules.add(mod)
+                    for a in node.names:
+                        # `from repro.optim import grad_compression` imports
+                        # a *module*; count it as such either way
+                        imported_modules.add(f"{mod}.{a.name}")
+                        if not is_init:
+                            used.add(a.asname or a.name)
+            used_by_file[py] = used
+    return used_by_file, imported_modules
+
+
+def dead_exports(repo_root) -> dict:
+    """{"symbols": [(module, name, lineno)], "modules": [module]} with no
+    in-repo reference outside their defining file."""
+    repo_root = pathlib.Path(repo_root)
+    src_root = repo_root / "src"
+    used_by_file, imported = _usages(repo_root)
+
+    dead_syms = []
+    seen_modules = set()
+    for module, name, lineno, py in _public_symbols(src_root):
+        seen_modules.add(module)
+        if not any(name in used for f, used in used_by_file.items()
+                   if f != py):
+            dead_syms.append((module, name, lineno))
+
+    dead_mods = sorted(
+        m for m in seen_modules
+        if m not in imported
+        and not any(im.startswith(m + ".") for im in imported))
+    return {"symbols": dead_syms, "modules": dead_mods}
+
+
+def dead_exports_report(repo_root) -> list[str]:
+    """Human-readable report lines (informational — exit 0 either way)."""
+    repo_root = pathlib.Path(repo_root)
+    dead = dead_exports(repo_root)
+    lines = ["jaxlint dead-exports report (informational; identifier-based,"
+             " so a hit means 'no in-repo reference found')", ""]
+    if dead["modules"]:
+        lines.append("modules imported nowhere:")
+        lines.extend(f"  {m}" for m in dead["modules"])
+        lines.append("")
+    if dead["symbols"]:
+        lines.append("public symbols with no in-repo reference:")
+        for module, name, lineno in dead["symbols"]:
+            path = "src/" + module.replace(".", "/") + ".py"
+            lines.append(f"  {module}.{name}  ({path}:{lineno})")
+    if not dead["modules"] and not dead["symbols"]:
+        lines.append("no dead exports found")
+    return lines

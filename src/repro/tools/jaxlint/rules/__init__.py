@@ -1,0 +1,4 @@
+"""Rule modules self-register on import (see ``core.register``)."""
+
+from repro.tools.jaxlint.rules import (donate, hostsync, pallastile,  # noqa: F401
+                                       shard, tracerbranch)

@@ -1,0 +1,118 @@
+"""DONATE: no reads of a buffer after it was donated to a jit.
+
+``jax.jit(..., donate_argnums=...)`` lets XLA reuse the argument's buffers
+for the outputs — the engine's state-donating train step and chunked
+dispatcher both rely on it to keep the update in-place.  The flip side:
+after ``new_state = jit_step(state, batch)``, ``state`` is a deleted
+buffer, and touching it raises ``RuntimeError: Array has been deleted``
+*only on backends that actually donate* — CPU tests pass, the TPU run
+crashes.  (The runner's step-0 checkpoint exists precisely because
+``init_state`` is donated on the first dispatch.)
+
+Mechanics, per function scope: find local bindings
+``f = jax.jit(g, donate_argnums=...)`` (including conditional
+``(0,) if flag else ()`` — treated as "may donate") and
+``@functools.partial(jax.jit, donate_argnums=...)`` decorations, record
+which *named* variables are passed in donated positions at each call of
+``f``, then flag any later read of those names that is not preceded by a
+rebinding (``state = f(state)`` rebinding on the call line is the blessed
+idiom).  Line-ordered and scope-local by design: cross-module donation
+(a donating callable received as an argument) is invisible — keep such
+contracts documented at the callee.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.tools.jaxlint.astutil import (dotted, is_jit_expr, kw,
+                                         literal_ints, unwrap_partial)
+from repro.tools.jaxlint.core import register
+
+
+def _donating_binding(node: ast.Assign) -> tuple[str, list[int]] | None:
+    """``f = jax.jit(g, donate_argnums=...)`` -> ("f", positions)."""
+    if len(node.targets) != 1 or not isinstance(node.targets[0], ast.Name):
+        return None
+    call = node.value
+    if not isinstance(call, ast.Call) or not is_jit_expr(call.func):
+        return None
+    positions = literal_ints(kw(call.keywords, "donate_argnums"))
+    if not positions:
+        return None
+    return node.targets[0].id, positions
+
+
+def _donating_def(fn) -> list[int]:
+    """donate positions of an ``@(functools.partial(jax.)jit, donate_...)``
+    decorated function (empty when it doesn't donate)."""
+    for dec in fn.decorator_list:
+        if isinstance(dec, ast.Call):
+            inner, kws = unwrap_partial(dec)
+            if inner is not None and is_jit_expr(inner):
+                return literal_ints(kw(kws, "donate_argnums"))
+            if is_jit_expr(dec.func):
+                return literal_ints(kw(dec.keywords, "donate_argnums"))
+    return []
+
+
+def _scan_scope(ctx, body, qual: str):
+    donors: dict[str, list[int]] = {}
+    stores: dict[str, list[int]] = {}    # name -> store linenos
+    loads: dict[str, list] = {}          # name -> Name load nodes
+    donated: list[tuple[str, int, str]] = []  # (var, call line, callee)
+
+    def walk(stmts):
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                d = _donating_def(st)
+                if d:
+                    donors[st.name] = d
+                continue  # nested scopes are scanned separately
+            if isinstance(st, ast.Assign):
+                b = _donating_binding(st)
+                if b is not None:
+                    donors[b[0]] = b[1]
+            for node in ast.walk(st):
+                if isinstance(node, ast.Name):
+                    if isinstance(node.ctx, ast.Store):
+                        stores.setdefault(node.id, []).append(node.lineno)
+                    elif isinstance(node.ctx, ast.Load):
+                        loads.setdefault(node.id, []).append(node)
+                if isinstance(node, ast.Call):
+                    callee = dotted(node.func)
+                    if callee in donors:
+                        for pos in donors[callee]:
+                            if pos < len(node.args) and \
+                                    isinstance(node.args[pos], ast.Name):
+                                donated.append((node.args[pos].id,
+                                                node.lineno, callee))
+
+    walk(body)
+    for var, call_line, callee in donated:
+        rebinds = stores.get(var, [])
+        for load in loads.get(var, []):
+            if load.lineno <= call_line:
+                continue
+            # a rebinding between the donating call (inclusive: the
+            # `state = f(state)` idiom) and the read makes the read safe
+            if any(call_line <= s <= load.lineno for s in rebinds):
+                continue
+            where = f" in `{qual}`" if qual else ""
+            yield ctx.finding(
+                load, "DONATE",
+                f"`{var}` is read after being donated to `{callee}` "
+                f"(donating call at line {call_line}{where}) — donated "
+                f"buffers are deleted on backends that honor donation; "
+                f"rebind the result or drop donate_argnums")
+            break  # one finding per donated variable per call
+
+
+@register("DONATE", "argument read after being passed to a "
+                    "donate_argnums jit")
+def check(ctx):
+    yield from _scan_scope(ctx, ctx.tree.body, "")
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield from _scan_scope(ctx, node.body,
+                                   ctx.qualnames.get(node, node.name))

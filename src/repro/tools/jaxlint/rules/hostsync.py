@@ -1,0 +1,65 @@
+"""HOSTSYNC: no host synchronization on the hot loop.
+
+The paper's dispatch-efficiency story (and PR 4/5's measured speedups)
+depends on the training and serving loops staying *asynchronous*: the host
+dispatches work and only rejoins the device at designed sync points (one
+metrics fetch per chunk, one ``block_until_ready`` per wave).  A stray
+``np.asarray`` / ``.item()`` / ``float(tracer)`` / ``jax.device_get`` /
+``block_until_ready`` anywhere else stalls the pipeline for a full
+round-trip per step — the exact regression PRs 3-5 hand-removed.
+
+The rule fires only in the hot-loop modules (``config.hot_loop_modules``)
+and skips the sanctioned sync points (``config.sync_allowlist``, matched
+by function qualname).  ``float(<literal>)`` is ignored — ``float("-inf")``
+is not a device fetch.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.tools.jaxlint.core import register
+
+
+def _sync_pattern(call: ast.Call) -> str | None:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        if (f.attr == "asarray" and isinstance(f.value, ast.Name)
+                and f.value.id in ("np", "numpy", "onp")):
+            return f"{f.value.id}.asarray"
+        if f.attr == "item" and not call.args and not call.keywords:
+            return ".item()"
+        if f.attr in ("block_until_ready", "device_get"):
+            return f.attr
+    elif isinstance(f, ast.Name):
+        if f.id in ("block_until_ready", "device_get"):
+            return f.id
+        if (f.id == "float" and call.args
+                and not isinstance(call.args[0], ast.Constant)):
+            return "float()"
+    return None
+
+
+@register("HOSTSYNC", "host sync (np.asarray/.item()/float()/device_get/"
+                      "block_until_ready) on a hot-loop path")
+def check(ctx):
+    module = next((m for m in ctx.config.hot_loop_modules
+                   if ctx.module_path == m or ctx.module_path.endswith("/" + m)),
+                  None)
+    if module is None:
+        return
+    allowed = ctx.config.sync_allowlist.get(module, ())
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        pat = _sync_pattern(node)
+        if pat is None:
+            continue
+        qual = ctx.qualname_of(node)
+        if any(qual == a or qual.startswith(a + ".") for a in allowed):
+            continue
+        where = f"in `{qual}`" if qual else "at module level"
+        yield ctx.finding(
+            node, "HOSTSYNC",
+            f"host sync `{pat}` {where} — hot-loop modules stay async "
+            f"outside the sanctioned sync points (see sync_allowlist)")

@@ -1,0 +1,155 @@
+"""PALLASTILE: Pallas block shapes must respect TPU tiling + VMEM limits.
+
+TPU vector memory is tiled ``(8, 128)`` (sublane x lane) for fp32: a
+``BlockSpec`` / scratch block whose last dim is not a multiple of 128, or
+whose second-to-last dim is not a multiple of 8, gets padded up by Mosaic —
+silently wasting VMEM and MXU occupancy — and several such shapes only run
+at all because the CPU interpreter (`interpret=True`, the default
+everywhere off-TPU in this repo) doesn't enforce the layout.  The rule
+flags misaligned literals and also estimates each ``pallas_call``'s VMEM
+footprint (sum over block + scratch shapes x dtype), erroring above
+``config.vmem_cap_bytes`` (~16 MB/core on current TPUs).
+
+Resolution is static-only: a dim resolves when it is an int literal, a
+module-level int constant (``PAD = 128``), or the enclosing function
+parameter's int default (``block_m: int = 128``).  Unresolvable dims are
+skipped for alignment and contribute nothing to the (thus lower-bound)
+VMEM estimate.  Intentionally-narrow blocks — a ``(1, N)`` bias row, a
+``(Bq, 1)`` online-softmax column — are real and fine: they earn a
+``# jaxlint: disable=PALLASTILE -- why`` on the line.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.tools.jaxlint.astutil import dotted, int_defaults, kw
+from repro.tools.jaxlint.core import DTYPE_BYTES, register
+
+
+def _is_blockspec(call: ast.Call) -> bool:
+    d = dotted(call.func)
+    return d is not None and d.split(".")[-1] == "BlockSpec"
+
+
+def _is_vmem(call: ast.Call) -> bool:
+    d = dotted(call.func)
+    return d is not None and d.split(".")[-1] == "VMEM"
+
+
+def _shape_tuple(call: ast.Call):
+    if call.args and isinstance(call.args[0], (ast.Tuple, ast.List)):
+        return call.args[0]
+    return None
+
+
+def _resolve(elt, env: dict[str, int]) -> int | None:
+    if isinstance(elt, ast.Constant) and isinstance(elt.value, int) \
+            and not isinstance(elt.value, bool):
+        return elt.value
+    if isinstance(elt, ast.Name):
+        return env.get(elt.id)
+    return None
+
+
+def _dtype_bytes(call: ast.Call, default: int) -> int:
+    # pltpu.VMEM((shape), jnp.float32) — dtype is the second positional arg
+    if len(call.args) >= 2:
+        d = dotted(call.args[1])
+        if d is not None and d.split(".")[-1] in DTYPE_BYTES:
+            return DTYPE_BYTES[d.split(".")[-1]]
+    return default
+
+
+def _env_for(ctx, node) -> dict[str, int]:
+    env = dict(ctx.int_constants)
+    fn = ctx.enclosing_function(node)
+    while fn is not None:
+        for name, val in int_defaults(fn).items():
+            env.setdefault(name, val)
+        fn = ctx.enclosing_function(fn)
+    return env
+
+
+def _alignment_findings(ctx, call, env):
+    shape = _shape_tuple(call)
+    if shape is None or len(shape.elts) < 2:
+        return
+    src = ast.unparse(shape)
+    lane, sub = ctx.config.lane, ctx.config.sublane
+    last = _resolve(shape.elts[-1], env)
+    if last is not None and last % lane != 0:
+        yield ctx.finding(
+            shape, "PALLASTILE",
+            f"block shape {src}: last dim {last} is not a multiple of "
+            f"{lane} (TPU lane width) — Mosaic pads every block to "
+            f"({sub}, {lane}) tiles; only the interpreter tolerates this "
+            f"for free")
+    second = _resolve(shape.elts[-2], env)
+    if second is not None and second % sub != 0:
+        yield ctx.finding(
+            shape, "PALLASTILE",
+            f"block shape {src}: second-to-last dim {second} is not a "
+            f"multiple of {sub} (TPU sublane) — the block pads up to "
+            f"({sub}, {lane}) tiles on the compiled path")
+
+
+def _spec_bytes(call, env, default_bytes) -> int:
+    """Lower-bound VMEM bytes of one BlockSpec/VMEM call (0 if any dim is
+    unresolvable)."""
+    shape = _shape_tuple(call)
+    if shape is None:
+        return 0
+    total = 1
+    for elt in shape.elts:
+        v = _resolve(elt, env)
+        if v is None:
+            return 0
+        total *= v
+    return total * _dtype_bytes(call, default_bytes)
+
+
+def _iter_spec_calls(node):
+    """BlockSpec/VMEM calls inside a pallas_call's spec keywords."""
+    for name in ("in_specs", "out_specs", "scratch_shapes"):
+        val = kw(node.keywords, name)
+        if val is None:
+            continue
+        for sub in ast.walk(val):
+            if isinstance(sub, ast.Call) and (_is_blockspec(sub)
+                                              or _is_vmem(sub)):
+                yield sub
+
+
+@register("PALLASTILE", "Pallas block shape off the (8, 128) TPU tile grid "
+                        "or pallas_call over the VMEM budget")
+def check(ctx):
+    cfg = ctx.config
+    path = ctx.module_path
+    if not (path.startswith(cfg.kernel_path_prefix)
+            and path.endswith(cfg.kernel_file_suffix)):
+        return
+    seen: set = set()
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func)
+        if d is not None and d.split(".")[-1] == "pallas_call":
+            env = _env_for(ctx, node)
+            vmem = 0
+            for spec in _iter_spec_calls(node):
+                seen.add(spec)
+                yield from _alignment_findings(ctx, spec, env)
+                vmem += _spec_bytes(spec, env, cfg.default_dtype_bytes)
+            if vmem > cfg.vmem_cap_bytes:
+                yield ctx.finding(
+                    node, "PALLASTILE",
+                    f"pallas_call estimated VMEM footprint >= "
+                    f"{vmem / 2**20:.1f} MiB (blocks + scratch, lower "
+                    f"bound) exceeds the {cfg.vmem_cap_bytes / 2**20:.0f} "
+                    f"MiB budget — shrink block shapes or split the kernel")
+    # BlockSpec/VMEM literals outside a pallas_call (helpers, constants)
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and node not in seen \
+                and (_is_blockspec(node) or _is_vmem(node)):
+            yield from _alignment_findings(ctx, node, _env_for(ctx, node))

@@ -1,0 +1,76 @@
+"""SHARD: batch-bearing entry points must route through ``dist.shard``.
+
+The repo's scaling contract (ROADMAP, PR 1) is logical-axis sharding: model
+and engine code annotates batch-bearing arrays with
+``dist.sharding.shard(x, "batch", ...)``, which degrades to identity
+mesh-less, so one code path serves unit tests and data-parallel production.
+An entry point that takes a batch and never routes it through ``shard``
+works fine on one device and silently stops scaling on a mesh — the same
+class of regression PR 3 fixed by annotating the serving forward.
+
+Granularity is per module: a ``serve/``/``train/`` module that calls
+``shard`` anywhere is considered to uphold the contract (the call site is
+usually a jitted inner forward, not the entry point itself).  In a module
+with *no* ``shard`` call, every public batch-bearing entry point is
+flagged: top-level public functions, public methods of public classes, and
+functions nested one level inside public factories (the ``make_*`` pattern
+returns the real entry point).  Delegating modules — where sharding is the
+loss's or model's contract — carry a pragma naming the delegate.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.tools.jaxlint.core import register
+
+
+def _module_calls_shard(tree: ast.Module) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Name) and f.id == "shard") or \
+                    (isinstance(f, ast.Attribute) and f.attr == "shard"):
+                return True
+    return False
+
+
+def _entry_points(tree: ast.Module):
+    """Yield candidate entry-point FunctionDefs (see module docstring)."""
+    for stmt in tree.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if stmt.name.startswith("_"):
+                continue
+            yield stmt
+            for sub in stmt.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield sub
+        elif isinstance(stmt, ast.ClassDef) and not stmt.name.startswith("_"):
+            for sub in stmt.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and not sub.name.startswith("_"):
+                    yield sub
+
+
+@register("SHARD", "batch-bearing public entry point in serve/ or train/ "
+                   "never routes inputs through dist.shard")
+def check(ctx):
+    path = ctx.module_path
+    if path.endswith("__init__.py") or not any(
+            path.startswith(p) for p in ctx.config.shard_module_prefixes):
+        return
+    if _module_calls_shard(ctx.tree):
+        return
+    batchy = set(ctx.config.batch_param_names)
+    for fn in _entry_points(ctx.tree):
+        a = fn.args
+        params = [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+        hit = next((p for p in params if p in batchy), None)
+        if hit is None:
+            continue
+        qual = ctx.qualnames.get(fn, fn.name)
+        yield ctx.finding(
+            fn, "SHARD",
+            f"batch-bearing entry point `{qual}({hit})` — module never "
+            f"routes inputs through dist.sharding.shard; annotate the "
+            f"batch axis or carry a pragma naming where sharding happens")

@@ -1,0 +1,151 @@
+"""TRACERBRANCH: no Python control flow on traced values.
+
+Inside a function that jax traces (``jax.jit`` target or ``pl.pallas_call``
+kernel), a Python ``if``/``while`` on a traced value raises
+``TracerBoolConversionError`` at trace time at best — and at worst, when
+the value is concrete on CPU test rigs but traced on the TPU path (e.g.
+under the Pallas interpreter), it silently bakes one branch into the
+compiled program and recompiles per value.  ``len(tracer)`` is the same
+hazard through ``__len__``.
+
+Mechanics: module-local traced-function discovery (see
+``astutil.traced_functions``), then a conservative forward taint pass —
+parameters (minus statics) are tainted, assignments propagate taint, and
+``.shape`` / ``.ndim`` / ``.dtype`` / ``.size`` accesses *clear* it (shapes
+are static under tracing, so ``if x.shape[0] > 1:`` is fine).  Nested
+function defs (scan bodies, ``pl.when`` callees) inherit the outer taint
+plus their own parameters.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.tools.jaxlint.astutil import all_params, traced_functions
+from repro.tools.jaxlint.core import register
+
+#: attribute accesses that yield static (non-traced) values
+NEUTRAL_ATTRS = frozenset({"shape", "ndim", "dtype", "size"})
+
+
+def _target_names(node) -> set[str]:
+    """Names bound by an assignment target.  ``h_s[l] = h`` taints the
+    container ``h_s``, never the index ``l`` (which stays whatever it was)."""
+    out: set[str] = set()
+    if isinstance(node, ast.Name):
+        out.add(node.id)
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for elt in node.elts:
+            out |= _target_names(elt)
+    elif isinstance(node, ast.Starred):
+        out |= _target_names(node.value)
+    elif isinstance(node, (ast.Subscript, ast.Attribute)):
+        out |= _target_names(node.value)
+    return out
+
+
+class _FnScan:
+    def __init__(self, ctx, fn_name: str):
+        self.ctx = ctx
+        self.fn_name = fn_name
+        self.findings: list = []
+
+    # -- expressions -------------------------------------------------------
+
+    def expr_taint(self, node, tainted, hits: list) -> bool:
+        """True when the expression's value carries taint; records len()
+        and if-expression findings as side effects."""
+        if node is None:
+            return False
+        if isinstance(node, ast.Name):
+            if node.id in tainted:
+                hits.append(node.id)
+                return True
+            return False
+        if isinstance(node, ast.Attribute) and node.attr in NEUTRAL_ATTRS:
+            return False  # static under tracing; do not descend
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "len":
+            lh: list = []
+            t = False
+            for a in node.args:
+                t = self.expr_taint(a, tainted, lh) or t
+            if t:
+                hits.extend(lh)
+                self.findings.append(self.ctx.finding(
+                    node, "TRACERBRANCH",
+                    f"len() of traced value `{lh[0]}` in traced "
+                    f"`{self.fn_name}` — use a static shape "
+                    f"(`{lh[0]}.shape[0]`) instead"))
+            return t
+        if isinstance(node, ast.IfExp):
+            th: list = []
+            if self.expr_taint(node.test, tainted, th):
+                self.findings.append(self.ctx.finding(
+                    node, "TRACERBRANCH",
+                    f"conditional expression on traced value `{th[0]}` in "
+                    f"traced `{self.fn_name}` — use jnp.where/lax.select"))
+            t = self.expr_taint(node.body, tainted, hits)
+            t = self.expr_taint(node.orelse, tainted, hits) or t
+            return t or bool(th)
+        t = False
+        for child in ast.iter_child_nodes(node):
+            t = self.expr_taint(child, tainted, hits) or t
+        return t
+
+    # -- statements --------------------------------------------------------
+
+    def run(self, stmts, tainted: set) -> None:
+        for st in stmts:
+            self.stmt(st, tainted)
+
+    def stmt(self, st, tainted: set) -> None:
+        if isinstance(st, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            if st.value is not None and \
+                    self.expr_taint(st.value, tainted, []):
+                targets = st.targets if isinstance(st, ast.Assign) \
+                    else [st.target]
+                for tgt in targets:
+                    tainted |= _target_names(tgt)
+        elif isinstance(st, (ast.If, ast.While)):
+            hits: list = []
+            if self.expr_taint(st.test, tainted, hits):
+                kind = "if" if isinstance(st, ast.If) else "while"
+                self.findings.append(self.ctx.finding(
+                    st, "TRACERBRANCH",
+                    f"Python `{kind}` branches on traced value `{hits[0]}` "
+                    f"in traced `{self.fn_name}` — use lax.cond/select, or "
+                    f"hoist it to a static argument"))
+            self.run(st.body, tainted)
+            self.run(st.orelse, tainted)
+        elif isinstance(st, ast.For):
+            if self.expr_taint(st.iter, tainted, []):
+                tainted |= _target_names(st.target)
+            self.run(st.body, tainted)
+            self.run(st.orelse, tainted)
+        elif isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested defs trace under the same jit: inherit taint + own args
+            inner = set(tainted) | set(all_params(st))
+            inner.discard("self")
+            self.run(st.body, inner)
+        else:
+            for _field, value in ast.iter_fields(st):
+                if isinstance(value, list):
+                    for v in value:
+                        if isinstance(v, ast.stmt):
+                            self.stmt(v, tainted)
+                        elif isinstance(v, ast.expr):
+                            self.expr_taint(v, tainted, [])
+                elif isinstance(value, ast.stmt):
+                    self.stmt(value, tainted)
+                elif isinstance(value, ast.expr):
+                    self.expr_taint(value, tainted, [])
+
+
+@register("TRACERBRANCH", "Python if/while/len() on values traced under "
+                          "jax.jit or pl.pallas_call")
+def check(ctx):
+    for fn, tainted in traced_functions(ctx.tree).items():
+        scan = _FnScan(ctx, ctx.qualnames.get(fn, fn.name))
+        scan.run(fn.body, set(tainted))
+        yield from scan.findings

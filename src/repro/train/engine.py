@@ -164,7 +164,7 @@ def default_stream(model_cfg, batch_size: int) -> MRFSampleStream:
                            batch_size=batch_size)
 
 
-def train(fns: ModelFns, engine_cfg: EngineConfig, runner_cfg: RunnerConfig,
+def train(fns: ModelFns, engine_cfg: EngineConfig, runner_cfg: RunnerConfig,  # jaxlint: disable=SHARD -- delegates to step.make_train_step; placement via explicit `shardings` arg
           *, batches: Callable[[int], Any] | None = None,
           stream: MRFSampleStream | None = None,
           data_key: jax.Array | None = None, init_key: jax.Array | None = None,

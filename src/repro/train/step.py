@@ -75,7 +75,7 @@ def make_train_step(loss_fn, opt: Optimizer, *, microbatches: int = 1,
     grads+apply pipeline (see module docstring); ``loss_fn`` may be None then.
     """
     if fused_step is not None:
-        def train_step(state: TrainState, batch):
+        def train_step(state: TrainState, batch):  # jaxlint: disable=SHARD -- fused_step owns placement: the Pallas path is single-core by design
             new_params, new_aux, metrics = fused_step(state.params, state.aux,
                                                       batch)
             new_state = TrainState(step=state.step + 1, params=new_params,
@@ -84,7 +84,7 @@ def make_train_step(loss_fn, opt: Optimizer, *, microbatches: int = 1,
             return new_state, metrics
         return train_step
 
-    def grads_of(params, aux, batch):
+    def grads_of(params, aux, batch):  # jaxlint: disable=SHARD -- sharding is the loss_fn's contract; models annotate their own batch axes
         if aux_loss:
             (loss, new_aux), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, aux, batch)
@@ -92,7 +92,7 @@ def make_train_step(loss_fn, opt: Optimizer, *, microbatches: int = 1,
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         return loss, grads, aux
 
-    def train_step(state: TrainState, batch):
+    def train_step(state: TrainState, batch):  # jaxlint: disable=SHARD -- sharding is the loss_fn's contract; models annotate their own batch axes
         params = state.params
         if microbatches == 1:
             loss, grads, aux = grads_of(params, state.aux, batch)

@@ -1,0 +1,10 @@
+"""DONATE negative: the ``state = f(state)`` rebinding idiom is safe."""
+import jax
+
+
+def fit(step, state, batches):
+    step_d = jax.jit(step, donate_argnums=(0,))
+    metrics = None
+    for batch in batches:
+        state, metrics = step_d(state, batch)  # rebinds on the call line
+    return state, metrics

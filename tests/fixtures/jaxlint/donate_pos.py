@@ -1,0 +1,11 @@
+"""DONATE positive: reading a buffer after the call that donated it."""
+import jax
+
+
+def fit(step, state, batches, log):
+    step_d = jax.jit(step, donate_argnums=(0,))
+    for batch in batches:
+        new_state, metrics = step_d(state, batch)
+        log(state.step, metrics)  # FINDING `state` was donated above
+        state = new_state
+    return state

@@ -1,0 +1,21 @@
+"""HOSTSYNC negative: sanctioned sync points and static floats only.
+
+Linted as if it were ``src/repro/serve/executor.py``, whose sync_allowlist
+blesses ``InflightWave.wait*`` — and ``float(<literal>)`` is never a sync.
+"""
+import jax
+import numpy as np
+
+
+class InflightWave:
+    def wait(self):
+        jax.block_until_ready(self.out)  # allowlisted qualname
+        return np.asarray(self.out)      # allowlisted qualname
+
+    def wait_tiles(self, tiles):
+        return [np.asarray(t) for t in tiles]  # allowlisted qualname
+
+
+def schedule(waves):
+    worst = float("-inf")  # float of a literal is not a device fetch
+    return worst, waves

@@ -1,0 +1,15 @@
+"""HOSTSYNC positive: five distinct host syncs on a hot-loop module path.
+
+Linted as if it were ``src/repro/ft/runner.py`` (a hot-loop module).
+"""
+import jax
+import numpy as np
+
+
+def loop(state, metrics, xs):
+    a = np.asarray(xs)                   # FINDING np.asarray pulls to host
+    b = metrics["loss"].item()           # FINDING .item() blocks
+    c = float(metrics["gnorm"])          # FINDING float(tracer) blocks
+    jax.block_until_ready(state)         # FINDING explicit barrier
+    d = jax.device_get(metrics)          # FINDING device->host transfer
+    return a, b, c, d

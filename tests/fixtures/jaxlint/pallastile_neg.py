@@ -1,0 +1,22 @@
+"""PALLASTILE negative: aligned tiles inside the VMEM budget.
+
+Dims resolve through a module constant (TILE) and the enclosing function's
+int parameter default (block_m) — both sanctioned static sources.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+TILE = 128
+
+
+def call(kernel, x, block_m: int = 8):
+    return pl.pallas_call(
+        kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((block_m, TILE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, TILE), x.dtype),
+        scratch_shapes=[pltpu.VMEM((8, TILE), jnp.float32)],
+    )(x)

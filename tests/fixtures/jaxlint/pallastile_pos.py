@@ -1,0 +1,23 @@
+"""PALLASTILE positive: misaligned tiles and a VMEM blowout.
+
+Linted as if it were ``src/repro/kernels/fix/kernel.py``; under any other
+path the rule is silent (the test checks both).
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def call(kernel, x):
+    return pl.pallas_call(  # FINDING estimated VMEM ~32 MiB > 16 MiB cap
+        kernel,
+        grid=(4,),
+        in_specs=[
+            pl.BlockSpec((8, 96), lambda i: (i, 0)),   # FINDING lane 96
+            pl.BlockSpec((4, 128), lambda i: (i, 0)),  # FINDING sublane 4
+        ],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 128), x.dtype),
+        scratch_shapes=[pltpu.VMEM((8192, 1024), jnp.float32)],
+    )(x)

@@ -1,0 +1,11 @@
+"""Reasonless pragma: inert (HOSTSYNC still reported) AND itself a finding.
+
+Linted as if it were ``src/repro/ft/runner.py``; expected: one HOSTSYNC
+finding plus one PRAGMA finding, both on the pragma line.
+"""
+import jax
+
+
+def loop(state):
+    jax.block_until_ready(state)  # jaxlint: disable=HOSTSYNC
+    return state

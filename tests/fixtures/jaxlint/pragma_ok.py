@@ -1,0 +1,10 @@
+"""Pragma suppression: a reasoned pragma silences its line's finding.
+
+Linted as if it were ``src/repro/ft/runner.py``; expected: zero findings.
+"""
+import jax
+
+
+def loop(state):
+    jax.block_until_ready(state)  # jaxlint: disable=HOSTSYNC -- fixture: sanctioned final sync
+    return state

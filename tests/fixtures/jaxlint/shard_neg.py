@@ -1,0 +1,14 @@
+"""SHARD negative: the module routes its batch through dist.shard."""
+from repro.dist.sharding import shard
+
+
+def make_step(fns):
+    def step(params, batch):
+        batch = shard(batch, "batch", None)
+        return fns.apply(params, batch)
+
+    return step
+
+
+def _helper(batch):  # private: never an entry point
+    return batch

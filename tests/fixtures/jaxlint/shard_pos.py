@@ -1,0 +1,16 @@
+"""SHARD positive: batch-bearing entry points, no shard call anywhere.
+
+Linted as if it lived under ``src/repro/serve/`` — the same source under a
+non-serve/train path produces no findings (the test checks both).
+"""
+
+
+def make_step(fns):
+    def step(params, batch):  # FINDING entry point nested in a factory
+        return fns.apply(params, batch)
+
+    return step
+
+
+def serve(tokens):  # FINDING top-level batch-bearing entry point
+    return tokens + 1

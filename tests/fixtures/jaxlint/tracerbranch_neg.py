@@ -1,0 +1,27 @@
+"""TRACERBRANCH negative: static args, shape branches, untraced helpers,
+and subscript stores that must not taint their index."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def step(x, mode):
+    if mode == "fast":  # static argument: branching is fine
+        x = x + 1
+    b = x.shape[0]
+    if b > 1:           # shapes are static under tracing: fine
+        x = x * 2
+    acc = {}
+    i = 0
+    for i in range(b):
+        acc[i] = x      # storing at acc[i] must not taint the index i
+    if i >= 0:          # i is a Python int: fine
+        x = x + 0
+    return x, acc
+
+
+def helper(x):
+    if x > 0:  # not traced anywhere in this module: fine
+        return 1
+    return 0

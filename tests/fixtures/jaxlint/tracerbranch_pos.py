@@ -1,0 +1,12 @@
+"""TRACERBRANCH positive: Python control flow on jit-traced values."""
+import jax
+
+
+@jax.jit
+def step(x, y):
+    if x > 0:             # FINDING Python `if` on a traced value
+        y = y + 1
+    while y:              # FINDING Python `while` on a traced value
+        y = y - 1
+    n = len(x)            # FINDING len() goes through __len__ on a tracer
+    return x, y, n

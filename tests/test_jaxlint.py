@@ -1,0 +1,171 @@
+"""Tier-1 tests for repro.tools.jaxlint.
+
+Two layers:
+
+* the repo gate — ``src/`` must lint clean (zero unsuppressed findings;
+  every pragma carries a reason), same contract CI enforces via
+  ``scripts/check_lints.py``;
+* golden fixtures — one positive and one negative snippet per rule under
+  ``tests/fixtures/jaxlint/``.  Positive fixtures mark every expected
+  finding line with a ``# FINDING`` comment, and the test asserts the
+  analyzer reports exactly those lines (no more, no fewer).
+"""
+
+import pathlib
+
+import pytest
+
+from repro.tools.jaxlint import (PRAGMA_RULE, RULES, available_rules,
+                                 lint_repo, lint_source, parse_pragmas)
+from repro.tools.jaxlint.core import Finding
+from repro.tools.jaxlint.deadexports import dead_exports
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = REPO_ROOT / "tests" / "fixtures" / "jaxlint"
+
+#: fixture stem -> path the snippet pretends to live at (rules key off it);
+#: full-stem entries win over per-rule ones
+PRETEND_PATHS = {
+    "hostsync": "src/repro/ft/runner.py",
+    "hostsync_neg": "src/repro/serve/executor.py",  # its allowlist home
+    "tracerbranch": "src/repro/models/net.py",
+    "donate": "src/repro/models/loops.py",  # outside the SHARD domain
+    "shard": "src/repro/serve/steps.py",
+    "pallastile": "src/repro/kernels/fix/kernel.py",
+}
+
+
+def fixture_source(name: str) -> str:
+    return (FIXTURES / f"{name}.py").read_text()
+
+
+def marked_lines(source: str) -> list[int]:
+    return [i for i, text in enumerate(source.splitlines(), start=1)
+            if "# FINDING" in text]
+
+
+def lint_fixture(name: str, path: str | None = None) -> list[Finding]:
+    rule = name.rsplit("_", 1)[0]
+    path = path or PRETEND_PATHS.get(name) \
+        or PRETEND_PATHS.get(rule, "src/repro/ft/runner.py")
+    return lint_source(fixture_source(name), path)
+
+
+# --- the repo gate ---------------------------------------------------------
+
+def test_src_lints_clean():
+    findings = lint_repo(REPO_ROOT)
+    assert findings == [], "\n".join(f.key for f in findings)
+
+
+# --- golden fixtures, one pair per rule ------------------------------------
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_every_rule_has_fixture_pair(rule):
+    stem = rule.lower()
+    assert (FIXTURES / f"{stem}_pos.py").is_file()
+    assert (FIXTURES / f"{stem}_neg.py").is_file()
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_positive_fixture_hits_marked_lines(rule):
+    name = f"{rule.lower()}_pos"
+    source = fixture_source(name)
+    expected = marked_lines(source)
+    assert expected, f"{name}.py has no # FINDING markers"
+    findings = lint_fixture(name)
+    assert all(f.rule == rule for f in findings), findings
+    assert sorted(f.line for f in findings) == expected, findings
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_negative_fixture_is_clean(rule):
+    assert lint_fixture(f"{rule.lower()}_neg") == []
+
+
+def test_rules_are_path_scoped():
+    # the same offending source is silent outside the rule's domain
+    for name, other in [("hostsync_pos", "src/repro/models/net.py"),
+                        ("shard_pos", "src/repro/models/net.py"),
+                        ("pallastile_pos", "src/repro/serve/helpers.py")]:
+        assert lint_fixture(name, other) == []
+
+
+# --- pragmas ---------------------------------------------------------------
+
+def test_reasoned_pragma_suppresses():
+    assert lint_fixture("pragma_ok") == []
+
+
+def test_reasonless_pragma_is_inert_and_reported():
+    findings = lint_fixture("pragma_noreason")
+    assert sorted(f.rule for f in findings) == ["HOSTSYNC", PRAGMA_RULE]
+
+
+def test_unknown_rule_pragma_is_reported():
+    src = "x = 1  # jaxlint: disable=NOSUCHRULE -- because\n"
+    findings = lint_source(src, "src/repro/models/net.py")
+    assert [f.rule for f in findings] == [PRAGMA_RULE]
+    assert "NOSUCHRULE" in findings[0].message
+
+
+def test_multi_rule_pragma():
+    src = "y = f(x)  # jaxlint: disable=HOSTSYNC, SHARD -- shared reason\n"
+    suppress, problems = parse_pragmas(src, "p.py")
+    assert suppress == {1: {"HOSTSYNC", "SHARD"}}
+    assert problems == []
+
+
+def test_pragma_rule_is_not_suppressible():
+    # a reasonless pragma cannot be silenced by another pragma on its line
+    src = ("import jax\n\n\ndef f(state):\n"
+           "    jax.block_until_ready(state)"
+           "  # jaxlint: disable=HOSTSYNC, PRAGMA\n    return state\n")
+    findings = lint_source(src, "src/repro/ft/runner.py")
+    assert PRAGMA_RULE in {f.rule for f in findings}
+
+
+# --- registry + output formats ---------------------------------------------
+
+def test_registry_has_the_contract_rules():
+    names = set(available_rules())
+    assert {"HOSTSYNC", "TRACERBRANCH", "DONATE", "SHARD",
+            "PALLASTILE"} <= names
+    assert all(n == n.upper() for n in names)
+
+
+def test_github_annotation_format():
+    f = Finding(path="src/repro/x.py", line=7, rule="HOSTSYNC", message="m")
+    assert f.github() == ("::error file=src/repro/x.py,line=7,"
+                          "title=jaxlint HOSTSYNC::m")
+    assert f.key == "src/repro/x.py:7 HOSTSYNC m"
+
+
+def test_syntax_error_is_a_finding():
+    findings = lint_source("def broken(:\n", "src/repro/models/net.py")
+    assert [f.rule for f in findings] == ["SYNTAX"]
+
+
+# --- dead-exports report ---------------------------------------------------
+
+def test_dead_exports_on_synthetic_repo(tmp_path):
+    pkg = tmp_path / "src" / "repro"
+    pkg.mkdir(parents=True)
+    (pkg / "alpha.py").write_text(
+        "def used():\n    return 1\n\n\ndef dormant():\n    return 2\n")
+    (pkg / "beta.py").write_text(
+        "from repro.alpha import used\n\nVALUE = used()\n")
+    dead = dead_exports(tmp_path)
+    names = {n for _m, n, _l in dead["symbols"]}
+    assert "dormant" in names
+    assert "used" not in names
+    assert "VALUE" in names            # beta's constant is referenced nowhere
+    assert "repro.beta" in dead["modules"]
+    assert "repro.alpha" not in dead["modules"]
+
+
+def test_dead_exports_smoke_on_this_repo():
+    dead = dead_exports(REPO_ROOT)
+    assert set(dead) == {"symbols", "modules"}
+    # identifier-based usage: anything this very test references is alive
+    assert all(n != "dead_exports" for _m, n, _l in dead["symbols"])
