@@ -1,5 +1,5 @@
 """MRF serving benchmark: sync vs pipelined serving on the same request
-trace, for both recon-engine backends (float / int8-Pallas).
+trace, for both recon-engine backends (float / full-integer int8).
 
 Sync mode is the per-tile-retirement baseline (the pre-queue engine);
 pipelined mode streams the same trace through the persistent request queue
@@ -8,6 +8,18 @@ wave N+1 overlapped with compute of wave N).  Both modes run the identical
 jitted per-bucket forward, so their maps are bit-identical — the benchmark
 measures pure scheduling: voxels/s plus p50/p90/p99 latency **from enqueue
 time** per mode, and ``pipelined_speedup_vs_sync`` per backend.
+
+Both backends serve on the **autotuned** bucket set: the trace is replayed
+once through a probe executor to record its request-size distribution, then
+``serve_autotune.tune_buckets`` picks the set against measured per-bucket
+medians on this rig.  The int8 backend runs its rig-default implementation
+(fused whole-network kernel on TPU, vectorized lax fallback elsewhere); the
+pre-PR per-layer interpreter chain is re-measured as ``int8_before_layered``
+so the JSON carries the before/after int8 curve, and
+``int8_vs_float_speedup`` records the closed gap per mode.  Throughput
+samples are **interleaved** across all four (backend, mode) engines — one
+drain each per repetition, medians per engine — so machine-load drift
+spreads evenly instead of biasing whichever engine ran last.
 
 Writes machine-readable ``BENCH_mrf_serve.json`` (regenerated in place;
 commit it to record a perf data point) besides the CSV rows run.py prints.
@@ -20,12 +32,15 @@ from __future__ import annotations
 
 import json
 import pathlib
+import statistics
 
 import jax
 import jax.numpy as jnp
 
+from benchmarks import serve_autotune
 from repro.configs import get_config
 from repro.core import mrf_net, qat
+from repro.serve.executor import WaveExecutor
 from repro.serve.recon import ReconEngine, ReconRequest, latency_percentiles
 
 OUT_PATH = pathlib.Path("BENCH_mrf_serve.json")
@@ -60,53 +75,130 @@ def _request_wave(cfg, seed: int = 0):
 
 
 def _bench_mode(engine: ReconEngine, requests, waves: int) -> dict:
+    """Non-interleaved single-engine measurement (median over drains)."""
     engine.reconstruct(requests)  # warmup: traces every bucket shape
-    results = []
-    wall = voxels = 0.0
+    results, rates = [], []
+    voxels = 0
     for _ in range(waves):
         results.extend(engine.reconstruct(requests))
-        wall += engine.last_wave["wall_s"]
+        rates.append(engine.last_wave["voxels_per_s"])
         voxels += engine.last_wave["total_voxels"]
     pct = latency_percentiles(results)
-    return {"voxels_per_s": voxels / max(wall, 1e-12),
+    return {"voxels_per_s": statistics.median(rates),
             "latency_from_enqueue_ms": pct,
             "requests": len(results), "voxels": int(voxels),
             "waves_per_drain": engine.last_wave["n_waves"],
             "buckets_traced": engine.compile_cache_size()}
 
 
-def run(waves: int = 5, out_path=OUT_PATH):
+def _tuned_buckets(ints, requests, reps: int) -> dict:
+    """Record the trace's size distribution through a probe executor and
+    tune the bucket set against measured per-bucket medians (the
+    measurement-driven replacement for DEFAULT_BUCKETS)."""
+    probe = WaveExecutor(backend="int8", int_layers=ints)
+    probe.dispatch([r.features for r in requests]).wait()
+
+    def time_buckets(buckets):
+        return serve_autotune.measure_bucket_times(
+            probe._fwd, buckets, probe.in_dim, reps=reps)
+
+    return serve_autotune.tune_buckets(probe.request_sizes, time_buckets)
+
+
+def run(waves: int = 5, reps: int = 5, out_path=OUT_PATH):
     """run.py suite entry: yields (name, us_per_call, derived) rows and
-    writes the JSON record — per backend, sync vs pipelined voxels/s,
-    latency-from-enqueue percentiles, and pipelined_speedup_vs_sync."""
+    writes the JSON record — per backend, sync vs pipelined voxels/s on the
+    autotuned bucket set, latency-from-enqueue percentiles, per-bucket
+    tile throughput, pipelined_speedup_vs_sync, int8_vs_float_speedup and
+    the before/after int8 curve."""
     cfg = get_config("mrf-fpga")
     params, ints = _calibrated_net(cfg)
     requests = _request_wave(cfg)
+    tuned = _tuned_buckets(ints, requests, reps)
+    buckets = tuned["buckets"]
     record = {"suite": "mrf_serve", "arch": cfg.name,
               "n_frames": cfg.mrf_n_frames,
               "request_voxels": list(REQUEST_VOXELS), "waves": waves,
               "max_wave_voxels": MAX_WAVE_VOXELS,
+              "buckets": list(buckets),
+              "autotune": {"predicted_trace_s": tuned["predicted_trace_s"],
+                           "bucket_times_s": tuned["bucket_times_s"]},
               "backends": {}}
-    rows = []
+    rows = [("mrf_serve/buckets", 0.0, f"autotuned={list(buckets)}")]
+
+    engines = {}
     for backend, net_kw in (("float", {"params": params}),
                             ("int8", {"int_layers": ints})):
+        for mode in ("sync", "pipelined"):
+            engines[(backend, mode)] = ReconEngine(
+                backend=backend, mode=mode, buckets=buckets,
+                max_wave_voxels=MAX_WAVE_VOXELS, **net_kw)
+
+    # interleaved sampling: one drain per engine per repetition, so load
+    # drift spreads across engines instead of biasing the last one measured
+    for eng in engines.values():
+        eng.reconstruct(requests)  # warmup: traces every bucket shape
+    samples = {k: [] for k in engines}
+    results = {k: [] for k in engines}
+    for _ in range(waves):
+        for k, eng in engines.items():
+            results[k].extend(eng.reconstruct(requests))
+            samples[k].append(eng.last_wave["voxels_per_s"])
+
+    for backend in ("float", "int8"):
         by_mode = {}
         for mode in ("sync", "pipelined"):
-            engine = ReconEngine(backend=backend, mode=mode,
-                                 max_wave_voxels=MAX_WAVE_VOXELS, **net_kw)
-            r = _bench_mode(engine, requests, waves)
+            eng = engines[(backend, mode)]
+            pct = latency_percentiles(results[(backend, mode)])
+            r = {"voxels_per_s": statistics.median(samples[(backend, mode)]),
+                 "latency_from_enqueue_ms": pct,
+                 "requests": len(results[(backend, mode)]),
+                 "waves_per_drain": eng.last_wave["n_waves"],
+                 "buckets_traced": eng.compile_cache_size()}
             by_mode[mode] = r
             rows.append((f"mrf_serve/{backend}/{mode}",
-                         r["latency_from_enqueue_ms"]["p50_ms"] * 1e3,
+                         pct["p50_ms"] * 1e3,
                          f"voxels/s={r['voxels_per_s']:.0f} "
-                         f"p99={r['latency_from_enqueue_ms']['p99_ms']:.1f}ms"))
+                         f"p99={pct['p99_ms']:.1f}ms"))
         by_mode["pipelined_speedup_vs_sync"] = (
             by_mode["pipelined"]["voxels_per_s"]
             / max(by_mode["sync"]["voxels_per_s"], 1e-12))
+        # per-bucket tile throughput through this backend's jitted forward
+        bt = serve_autotune.measure_bucket_times(
+            engines[(backend, "sync")].executor._fwd, buckets,
+            engines[(backend, "sync")].in_dim, reps=reps)
+        by_mode["per_bucket_voxels_per_s"] = {
+            str(b): b / max(t, 1e-12) for b, t in sorted(bt.items())}
         record["backends"][backend] = by_mode
         rows.append((f"mrf_serve/{backend}/speedup", 0.0,
                      f"pipelined_speedup_vs_sync="
                      f"{by_mode['pipelined_speedup_vs_sync']:.3f}"))
+
+    # the closed gap: rig-default int8 impl vs float, same buckets/trace
+    record["int8_impl"] = engines[("int8", "sync")].int8_impl
+    record["int8_vs_float_speedup"] = {
+        mode: (record["backends"]["int8"][mode]["voxels_per_s"]
+               / max(record["backends"]["float"][mode]["voxels_per_s"], 1e-12))
+        for mode in ("sync", "pipelined")}
+    rows.append(("mrf_serve/int8_vs_float", 0.0,
+                 "sync={sync:.3f} pipelined={pipelined:.3f}".format(
+                     **record["int8_vs_float_speedup"])))
+
+    # before/after curve: the pre-PR per-layer interpreter chain, one drain
+    # (it is ~10-30x slower; a single wave bounds bench time)
+    before = _bench_mode(
+        ReconEngine(backend="int8", int_layers=ints, int8_impl="layered",
+                    mode="sync", max_wave_voxels=MAX_WAVE_VOXELS),
+        requests, 1)
+    record["int8_before_layered"] = {
+        "voxels_per_s": before["voxels_per_s"],
+        "speedup_after_vs_before": (
+            record["backends"]["int8"]["sync"]["voxels_per_s"]
+            / max(before["voxels_per_s"], 1e-12))}
+    rows.append(("mrf_serve/int8_before_layered", 0.0,
+                 f"voxels/s={before['voxels_per_s']:.0f} after/before="
+                 f"{record['int8_before_layered']['speedup_after_vs_before']:.1f}x"))
+
     pathlib.Path(out_path).write_text(json.dumps(record, indent=1))
     rows.append(("mrf_serve/json", 0.0, f"wrote {out_path}"))
     return rows

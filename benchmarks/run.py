@@ -8,10 +8,14 @@
 #                      stepwise AND chunked dispatch (--chunk-steps) with
 #                      chunk_speedup_vs_stepwise per backend
 #                      (writes BENCH_train_engine.json, the perf trajectory)
-#   mrf_serve_bench  — recon serving stack: sync vs pipelined voxels/s +
-#                      latency-from-enqueue percentiles and
-#                      pipelined_speedup_vs_sync for float/int8 backends
+#   mrf_serve_bench  — recon serving stack: sync vs pipelined voxels/s on
+#                      autotuned buckets + latency-from-enqueue percentiles,
+#                      pipelined_speedup_vs_sync, int8_vs_float_speedup,
+#                      per-bucket breakdown and the before/after int8 curve
 #                      (writes BENCH_mrf_serve.json)
+#   serve_autotune   — measured bucket-set + fused block-shape autotune with
+#                      the roofline/hlo_cost cross-check
+#                      (writes BENCH_serve_autotune.json)
 from __future__ import annotations
 
 import argparse
@@ -21,7 +25,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,eq3,resources,kernels,roofline,"
-                         "engine,mrf_serve")
+                         "engine,mrf_serve,serve_autotune")
     ap.add_argument("--steps", type=int, default=800,
                     help="training steps for table1 (scaled schedule)")
     ap.add_argument("--engine-steps", type=int, default=20,
@@ -31,12 +35,15 @@ def main() -> None:
                          "runs (the stepwise baseline always runs too)")
     ap.add_argument("--serve-waves", type=int, default=5,
                     help="timed request waves per backend for mrf_serve")
+    ap.add_argument("--serve-reps", type=int, default=5,
+                    help="interleaved timing repetitions for the serving "
+                         "suites' per-bucket medians")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (engine_bench, kernel_bench, mrf_serve_bench,
-                            roofline_report, table1_metrics, table_eq3_timing,
-                            table_resources)
+                            roofline_report, serve_autotune, table1_metrics,
+                            table_eq3_timing, table_resources)
 
     suites = [
         ("eq3", table_eq3_timing.run, {}),
@@ -45,7 +52,9 @@ def main() -> None:
         ("roofline", roofline_report.run, {}),
         ("engine", engine_bench.run, {"steps": args.engine_steps,
                                       "chunk_steps": args.chunk_steps}),
-        ("mrf_serve", mrf_serve_bench.run, {"waves": args.serve_waves}),
+        ("serve_autotune", serve_autotune.run, {"reps": args.serve_reps}),
+        ("mrf_serve", mrf_serve_bench.run, {"waves": args.serve_waves,
+                                            "reps": args.serve_reps}),
         ("table1", table1_metrics.run, {"steps": args.steps}),
     ]
     print("name,us_per_call,derived")

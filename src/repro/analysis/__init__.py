@@ -1,2 +1,3 @@
-from repro.analysis.roofline import (collective_bytes_from_hlo, roofline_terms,
-                                     TPU_V5E)
+from repro.analysis.hlo_cost import analyze_hlo
+from repro.analysis.roofline import (TPU_V5E, model_flops_decode,
+                                     model_flops_train, roofline_terms)

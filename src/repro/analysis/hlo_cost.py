@@ -38,7 +38,7 @@ _SHAPE_RE = re.compile(
 _OPND_RE = re.compile(r"%([\w\.\-]+)")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 
-COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
 
@@ -55,7 +55,7 @@ def _nbytes(dtype: str, dims: str) -> int:
 
 
 @dataclasses.dataclass
-class Cost:
+class _Cost:
     flops: float = 0.0
     flops_int8: float = 0.0  # subset of flops running on the int8 MXU path
     hbm_bytes: float = 0.0
@@ -180,21 +180,21 @@ def _op_traffic(kind: str, line: str, rhs: str, local: dict) -> float:
 
 def analyze_hlo(hlo: str) -> dict:
     comps, shapes = _split(hlo)
-    memo: dict[str, Cost] = {}
+    memo: dict[str, _Cost] = {}
     warnings: list[str] = []
 
-    def cost_of(name: str) -> Cost:
+    def cost_of(name: str) -> _Cost:
         if name in memo:
             return memo[name]
-        memo[name] = Cost()  # cycle guard
+        memo[name] = _Cost()  # cycle guard
         local = shapes.get(name, {})
-        total = Cost()
+        total = _Cost()
         for line in comps.get(name, ()):
             if " = " not in line:
                 continue
             lhs, rhs = line.split(" = ", 1)
             kind = _op_kind(rhs)
-            c = Cost()
+            c = _Cost()
             # ---- flops
             if kind in ("dot", "convolution"):
                 rm = _RESULT_RE.match(line)
@@ -215,7 +215,7 @@ def analyze_hlo(hlo: str) -> dict:
                     c.flops_int8 += f  # int8 MXU path (2x bf16 rate)
             # ---- collectives
             base_kind = kind.replace("-start", "").replace("-done", "")
-            if base_kind in COLLECTIVES and not kind.endswith("-done"):
+            if base_kind in _COLLECTIVES and not kind.endswith("-done"):
                 opnds = _operand_shapes(rhs, local)
                 c.coll[base_kind] += sum(_nbytes(dt, d) for dt, d in opnds)
             # ---- hbm bytes: per-op effective traffic (TPU fusion proxy)

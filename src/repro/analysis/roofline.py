@@ -1,22 +1,21 @@
-"""Roofline-term extraction from dry-run artifacts (DESIGN/EXPERIMENTS §Roofline).
+"""Roofline-term arithmetic over HLO cost numbers (DESIGN/EXPERIMENTS §Roofline).
 
     compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
     memory term     = HLO_bytes / (chips * HBM_bw)
     collective term = collective_bytes / (chips * link_bw)
 
-FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are NOT
-in cost_analysis, so we parse the post-SPMD-partitioning HLO text (shapes are
-per-device there) and sum operand sizes of every all-gather / all-reduce /
-reduce-scatter / all-to-all / collective-permute.
+FLOPs, HBM-proxy bytes and collective wire bytes all come from the
+trip-count-aware HLO analyzer (``repro.analysis.hlo_cost.analyze_hlo``) over
+the post-SPMD-partitioning module text (shapes are per-device there); this
+module turns them into time terms and the dominant bound.  Call sites:
+``launch.dryrun`` (the LM-zoo roofline records) and
+``benchmarks.serve_autotune`` (the int8 serving block-shape pass).
 
 Hardware constants (TPU v5e): 197 TFLOP/s bf16 (394 TOPS int8), 819 GB/s HBM,
 ~50 GB/s/link ICI.
 """
 
 from __future__ import annotations
-
-import re
-from collections import defaultdict
 
 TPU_V5E = {
     "peak_bf16_flops": 197e12,
@@ -25,62 +24,6 @@ TPU_V5E = {
     "ici_link_gbps": 50e9,
     "hbm_bytes": 16 * 2 ** 30,
 }
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-}
-
-COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-               "collective-permute")
-
-# e.g.  bf16[16,4096,128]{2,1,0}   or  f32[] ()
-_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?|pred)\[([0-9,]*)\]")
-
-
-def _shape_bytes(dtype: str, dims: str) -> int:
-    n = 1
-    if dims:
-        for d in dims.split(","):
-            n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
-
-
-def collective_bytes_from_hlo(hlo_text: str) -> dict:
-    """Sum operand bytes per collective kind from (post-partitioning) HLO.
-
-    Returns {"all-reduce": bytes, ..., "total": bytes, "count": n_ops}.
-    Operand shapes are taken from inside the op's argument parens; shapes in
-    partitioned HLO are per-device, so totals are per-device wire bytes.
-    """
-    out: dict = defaultdict(int)
-    count = 0
-    for line in hlo_text.splitlines():
-        s = line.strip()
-        if s.startswith("//") or " = " not in s:
-            continue
-        rhs = s.split(" = ", 1)[1]
-        kind = None
-        for c in COLLECTIVES:
-            # match the op name at the start of the op call, e.g.
-            # "bf16[...] all-gather(bf16[...] %x), replica_groups=..."
-            if re.search(rf"\]\S*\s+{c}(-start|-done)?\(", rhs) or \
-               rhs.startswith(f"{c}("):
-                kind = c
-                break
-        if kind is None:
-            continue
-        if "-done(" in rhs:
-            continue  # the -start op already carries the operands
-        count += 1
-        # operands = shapes inside the outermost parens of the call
-        call = rhs[rhs.index("("):]
-        for m in _SHAPE_RE.finditer(call):
-            out[kind] += _shape_bytes(m.group(1), m.group(2))
-    out["total"] = sum(out[c] for c in COLLECTIVES if c in out)
-    out["count"] = count
-    return dict(out)
 
 
 def roofline_terms(*, flops_per_device: float, bytes_per_device: float,

@@ -31,6 +31,28 @@ def jit_cache_size(jitted, *, fallback: int | None = None) -> int:
         return int(fallback)
 
 
+INT8_IMPLS = ("fused", "lax", "layered")
+
+
+def resolve_int8_impl(impl: str | None) -> str:
+    """Pick the int8 serving implementation: ``None`` -> fastest for the rig.
+
+    ``"fused"`` is the whole-network Pallas kernel (the TPU deployment
+    path: weights VMEM-resident, one ``pallas_call`` per voxel tile).
+    ``"lax"`` is the vectorized pure-lax forward — on CPU/GPU the Pallas
+    *interpreter* is the bottleneck (it executes the kernel body
+    block-by-block in Python), so anything that isn't a TPU defaults to the
+    lax path and skips Pallas entirely.  ``"layered"`` is the original
+    per-layer kernel chain, kept selectable as the measured baseline.
+    All three are bit-exact against ``qat.int_forward`` (tested).
+    """
+    if impl is None:
+        return "fused" if jax.default_backend() == "tpu" else "lax"
+    if impl not in INT8_IMPLS:
+        raise ValueError(f"int8 impl {impl!r} not in {INT8_IMPLS}")
+    return impl
+
+
 def resolve_interpret(interpret: bool | None) -> bool:
     """Auto-detect Pallas interpret mode: ``None`` -> compiled only on TPU.
 

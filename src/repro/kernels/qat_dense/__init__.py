@@ -1,1 +1,3 @@
-"""Int8 QAT dense kernel (pallas) + reference implementation."""
+"""Int8 QAT dense kernels: per-layer Pallas kernel, fused whole-network
+Pallas kernel, vectorized pure-lax fallback, and the reference oracle —
+all bit-exact against ``repro.core.qat.int_forward``."""

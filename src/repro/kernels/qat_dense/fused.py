@@ -1,0 +1,103 @@
+"""Fused whole-network int8 forward: one ``pallas_call`` per voxel tile.
+
+The per-layer launch chain (``ops.qat_dense`` once per layer) re-reads
+activations from HBM between layers and pads every operand to MXU tiles on
+every call — pure overhead for the paper's tiny MRF net, whose *entire*
+weight set is a few hundred KiB.  This kernel is the serving analogue of the
+paper's on-FPGA design: **all layer weights resident in VMEM** for the whole
+forward, with the complete pipeline fused into one kernel body per
+``(block_m, ·)`` voxel tile:
+
+    float features -> input quantization (``qat.quantize_input``)
+      -> [int8 x int8 -> int32 dot -> +bias -> fp32 requant -> round/clamp]
+         per hidden layer (ReLU fused into the [0, 127] clamp, zero-point 0)
+      -> fp32 head scale -> (optional) denormalize epilogue (T1/T2 in ms)
+
+Only the voxel (M) axis is gridded; weights use constant index maps so every
+grid step revisits the same VMEM-resident blocks.  Feature dims come
+pre-padded to the (8, 128) tile grid by ``ops.prepad_int_layers`` — done
+once at artifact load, not per call — so the kernel itself pads nothing.
+Zero padding is self-consistent through the net: padded weight columns
+produce zero activations which meet zero weight rows in the next layer.
+
+Bit-exactness contract: every arithmetic step matches
+``repro.core.qat.int_forward`` op-for-op (int32 accumulate, fp32 multiply
+with the oracle's operand grouping, round-to-nearest-even, clamp), and the
+optional denormalize epilogue multiplies *after* the head scale exactly like
+``data.pipeline.denormalize_targets`` composed outside — tests assert
+bit-exact agreement for the whole network.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import resolve_interpret
+
+
+def _fused_kernel(x_ref, sin_ref, *refs, n_layers: int, has_denorm: bool):
+    o_ref = refs[-1]
+    # input quantization (qat.quantize_input, op-for-op)
+    h = jnp.clip(jnp.round(x_ref[...] / sin_ref[0, 0]),
+                 -128.0, 127.0).astype(jnp.int8)
+    out = None
+    for i in range(n_layers):
+        w = refs[3 * i][...]
+        b = refs[3 * i + 1][...]
+        s = refs[3 * i + 2][...]
+        acc = jax.lax.dot(h, w, preferred_element_type=jnp.int32)
+        acc = acc + b.astype(jnp.int32)
+        scaled = acc.astype(jnp.float32) * s
+        if i == n_layers - 1:
+            out = scaled  # linear float head (s = s_in * s_w)
+        else:
+            # requantize: round-to-nearest-even then the [0, 127] clamp
+            # (ReLU fused, zero-point 0) — identical to qat.int_dense
+            h = jnp.clip(jnp.round(scaled), 0.0, 127.0).astype(jnp.int8)
+    if has_denorm:
+        out = out * refs[-2][...]  # denormalize epilogue: (T1, T2) -> ms
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("n_layers", "block_m",
+                                             "interpret", "has_denorm"))
+def fused_forward_call(x_p, s_in, *packed, n_layers: int, block_m: int = 256,
+                       interpret: bool | None = None,
+                       has_denorm: bool = False):
+    """Dispatch the fused net on pre-padded operands.
+
+    ``x_p``: (M, K0p) fp32 with M a multiple of ``block_m`` and K0p the
+    first layer's pre-padded fan-in.  ``packed``: per layer ``w_p`` (Kp, Np)
+    int8, ``b_p`` (1, Np) int32, ``s_p`` (1, Np) fp32 — requant multipliers
+    for hidden layers, the head scale for the last — then, iff
+    ``has_denorm``, one (1, Np_last) fp32 denormalization row.  Returns
+    (M, Np_last) fp32; the caller slices the true output columns.
+    """
+    interpret = resolve_interpret(interpret)
+    m, k0p = x_p.shape
+    np_last = packed[3 * (n_layers - 1)].shape[1]
+    in_specs = [
+        pl.BlockSpec((block_m, k0p), lambda i: (i, 0)),
+        pl.BlockSpec((1, 1), lambda i: (0, 0)),  # jaxlint: disable=PALLASTILE -- s_in is one fp32 scalar; a (1, 1) block is its minimal carrier
+    ]
+    for li in range(n_layers):
+        kp, np_ = packed[3 * li].shape
+        in_specs.append(pl.BlockSpec((kp, np_), lambda i: (0, 0)))
+        in_specs.append(pl.BlockSpec((1, np_), lambda i: (0, 0)))  # jaxlint: disable=PALLASTILE -- bias is a single broadcast row; padding it is one sublane tile
+        in_specs.append(pl.BlockSpec((1, np_), lambda i: (0, 0)))  # jaxlint: disable=PALLASTILE -- per-channel scale is a single broadcast row
+    if has_denorm:
+        in_specs.append(pl.BlockSpec((1, np_last), lambda i: (0, 0)))  # jaxlint: disable=PALLASTILE -- denormalize row broadcasts over the tile
+    kern = functools.partial(_fused_kernel, n_layers=n_layers,
+                             has_denorm=has_denorm)
+    return pl.pallas_call(
+        kern,
+        grid=(m // block_m,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, np_last), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, np_last), jnp.float32),
+        interpret=interpret,
+    )(x_p, s_in.reshape(1, 1), *packed)

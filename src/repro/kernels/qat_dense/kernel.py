@@ -10,6 +10,14 @@ Layout: classic (m, n, k) grid with an int32 VMEM accumulator; K is the
 innermost (fastest-varying) grid axis so the accumulator pattern is the
 standard Pallas revisiting-output-block idiom.
 
+This is the *layer-granularity* kernel: general (any M/K/N over the block
+grid) but one launch per layer, so activations round-trip through HBM
+between layers.  Serving the tiny MRF net uses ``fused.fused_forward_call``
+instead — the whole network in one ``pallas_call`` per voxel tile with all
+weights VMEM-resident — and ``ops.int_forward_lax`` off-TPU; this kernel
+remains the per-layer reference implementation (``ops.qat_dense`` /
+``ops.int_forward_pallas``) and the building block the tests sweep.
+
 The epilogue matches ``repro.core.qat.int_dense`` op-for-op (int32 accumulate,
 fp32 multiply, round-to-nearest-even, clamp) — the tests assert **bit-exact**
 agreement, mirroring the paper's FPGA-vs-Python exactness check.

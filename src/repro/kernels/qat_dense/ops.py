@@ -1,14 +1,42 @@
-"""Public wrapper for the int8 dense kernel: pads ragged shapes to MXU tiles,
-dispatches the kernel, and slices the result back.  Also provides
-``int_forward_pallas`` — the full-integer MRF network inference built from
-this kernel, interchangeable with ``repro.core.qat.int_forward``.
+"""Public wrappers for the int8 dense kernels.
+
+Three interchangeable implementations of the full-integer MRF network, all
+bit-exact against the ``repro.core.qat.int_forward`` oracle (the paper's
+FPGA-vs-Python criterion):
+
+* :func:`int_forward_fused` — the fast path on TPU: one whole-network
+  ``pallas_call`` per voxel tile (``fused.fused_forward_call``), all layer
+  weights VMEM-resident, input quantization / per-layer requantize / head
+  scale / optional denormalize fused into the kernel body.  Weights are
+  pre-padded **once** (:func:`prepad_int_layers`); per call only the voxel
+  (M) axis is padded.
+* :func:`int_forward_lax` — the fast path everywhere else: a vectorized
+  pure-``lax`` forward with no Pallas dispatch at all, so CPU/GPU rigs
+  skip the interpreter tax entirely.  Uses fp32 matmuls whenever the layer
+  magnitudes make fp32 accumulation exactly integral (see
+  :func:`_f32_dot_is_exact`), else int32 ``dot_general``.
+* :func:`int_forward_pallas` — the original per-layer kernel chain, kept as
+  the layered reference implementation and for per-layer kernel tests.
+
+Plus :func:`qat_dense` (one ragged-shape int8 layer through the Pallas
+kernel) and :func:`qat_dense_lax` (same contract, pure lax) as the
+layer-granularity primitives.
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
+import dataclasses
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.qat_dense.fused import fused_forward_call
 from repro.kernels.qat_dense.kernel import qat_dense_call
+
+# Integers with |v| < 2**24 are exactly representable in fp32; every partial
+# sum of an int8 x int8 dot stays exact below this.
+_F32_EXACT_LIMIT = float(2 ** 24)
 
 
 def _pad_to(x, m, axis):
@@ -36,9 +64,192 @@ def qat_dense(x_q, w_q, b_q, scale, *, relu: bool = True, float_out: bool = Fals
     return out[:m, :n]
 
 
-def int_forward_pallas(int_layers, x, *, interpret: bool | None = None):
-    """Full-integer MRF inference on the Pallas path (cf. qat.int_forward)."""
+# ---------------------------------------------------------------------------
+# Vectorized pure-lax fallback (no Pallas dispatch; exact by construction).
+# ---------------------------------------------------------------------------
+
+def _f32_dot_is_exact(k: int, b_q) -> bool:
+    """True iff ``int8 @ int8 + b`` accumulates exactly in fp32.
+
+    Products are bounded by 128*128 = 2**14; any summation order keeps every
+    partial sum an integer of magnitude <= k * 2**14 + max|b|, and integer
+    fp32 arithmetic is exact below 2**24.  ``b_q`` must be concrete (weights
+    always are in serving); a traced bias falls back to the int32 path.
+    """
+    try:
+        bmax = float(np.max(np.abs(np.asarray(b_q)))) if b_q.size else 0.0
+    except (jax.errors.TracerArrayConversionError, TypeError):
+        return False
+    return k * 16384.0 + bmax < _F32_EXACT_LIMIT
+
+
+def _lax_epilogue(acc_f32, scale, *, relu: bool, float_out: bool):
+    """The oracle epilogue on an fp32 accumulator that holds exact integers:
+    fp32 rescale, round-to-nearest-even, clamp — op-for-op ``qat.int_dense``."""
+    scaled = acc_f32 * scale
+    if float_out:
+        return scaled
+    y = jnp.round(scaled)
+    lo = 0.0 if relu else -128.0
+    return jnp.clip(y, lo, 127.0)
+
+
+def qat_dense_lax(x_q, w_q, b_q, scale, *, relu: bool = True,
+                  float_out: bool = False):
+    """``qat_dense`` contract on pure lax: (M,N) int8 (requantized) or fp32.
+
+    No padding, no Pallas: one ``dot_general`` (fp32 when exactness allows,
+    int32 otherwise) plus the fused-by-XLA epilogue.  Bit-exact vs
+    ``ref.ref_qat_dense`` for any shape.
+    """
+    k = int(x_q.shape[-1])
+    if _f32_dot_is_exact(k, b_q):
+        acc = jax.lax.dot(x_q.astype(jnp.float32), w_q.astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+        acc = acc + b_q.astype(jnp.float32)
+    else:
+        acc = jax.lax.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+                          preferred_element_type=jnp.int32)
+        acc = (acc + b_q).astype(jnp.float32)
+    out = _lax_epilogue(acc, scale, relu=relu, float_out=float_out)
+    return out if float_out else out.astype(jnp.int8)
+
+
+def int_forward_lax(int_layers, x):
+    """Full-integer MRF inference, vectorized pure lax (cf. qat.int_forward).
+
+    Hidden activations stay fp32 holding exact int8-range integers — values
+    identical to the oracle's int8 tensors, minus the per-layer dtype
+    round-trips.  Bit-exact against ``qat.int_forward`` for any net whose
+    layers pass :func:`_f32_dot_is_exact`; other layers transparently use
+    int32 accumulation (still exact, still no Pallas dispatch).
+    """
+    h = jnp.clip(jnp.round(x / int_layers[0].s_in), -128.0, 127.0)
+    for layer in int_layers:
+        if _f32_dot_is_exact(int(h.shape[-1]), layer.b_q):
+            acc = jax.lax.dot(h, layer.w_q.astype(jnp.float32),
+                              preferred_element_type=jnp.float32)
+            acc = acc + layer.b_q.astype(jnp.float32)
+        else:
+            acc = jax.lax.dot(h.astype(jnp.int32),
+                              layer.w_q.astype(jnp.int32),
+                              preferred_element_type=jnp.int32)
+            acc = (acc + layer.b_q).astype(jnp.float32)
+        if layer.s_out is None:
+            h = acc * (layer.s_in * layer.s_w)
+        else:
+            requant = (layer.s_in * layer.s_w) / layer.s_out
+            h = jnp.clip(jnp.round(acc * requant), 0.0, 127.0)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Pre-padded artifacts + the fused whole-network kernel.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PaddedIntNet:
+    """A full-integer net with every feature dim pre-padded to the MXU grid.
+
+    Built once at artifact load (weights are static); per-call work is then
+    M-only padding.  ``packed`` holds, per layer, ``w_p`` (Kp, Np) int8,
+    ``b_p`` (1, Np) int32 and ``s_p`` (1, Np) fp32 (requant multipliers for
+    hidden layers, the head scale for the last), exactly the operand layout
+    of ``fused.fused_forward_call``.
+    """
+
+    packed: tuple          # flat (w_p, b_p, s_p) * n_layers
+    s_in: jnp.ndarray      # fp32 scalar — input activation scale
+    n_layers: int
+    in_dim: int            # true (unpadded) fan-in of the first layer
+    in_dim_p: int          # padded fan-in
+    out_dim: int           # true fan-out of the head
+
+    @property
+    def padded_widths(self) -> tuple:
+        return tuple(self.packed[3 * i].shape[1]
+                     for i in range(self.n_layers))
+
+
+def prepad_int_layers(int_layers, *, block: int = 128) -> PaddedIntNet:
+    """Pad an ``IntLayer`` list's K/N dims to ``block`` multiples, once.
+
+    Zero padding is arithmetic-neutral through the whole net: padded weight
+    columns yield zero accumulators, zero bias, zero scale -> zero
+    activations, which then meet zero weight *rows* in the next layer.
+    The per-layer scale is precomputed with the oracle's operand grouping
+    (``(s_in * s_w) / s_out``) so downstream fp32 math is bit-identical.
+    """
+    packed = []
+    for layer in int_layers:
+        if layer.s_out is None:
+            scale = layer.s_in * layer.s_w
+        else:
+            scale = (layer.s_in * layer.s_w) / layer.s_out
+        wp = _pad_to(_pad_to(layer.w_q, block, 0), block, 1)
+        bp = _pad_to(layer.b_q, block, 0).reshape(1, -1)
+        sp = _pad_to(scale.astype(jnp.float32), block, 0).reshape(1, -1)
+        packed.extend((wp, bp, sp))
+    return PaddedIntNet(
+        packed=tuple(packed), s_in=jnp.asarray(int_layers[0].s_in, jnp.float32),
+        n_layers=len(int_layers), in_dim=int(int_layers[0].w_q.shape[0]),
+        in_dim_p=int(packed[0].shape[0]), out_dim=int(int_layers[-1].w_q.shape[1]))
+
+
+def int_forward_fused(net, x, *, block_m: int = 256,
+                      interpret: bool | None = None, denorm_scale=None):
+    """Whole-network fused int8 inference from float features.
+
+    ``net``: a :class:`PaddedIntNet` (pass ``prepad_int_layers(int_layers)``
+    output; an ``IntLayer`` list is padded on the fly for convenience).
+    Only M is padded here — to the tile grid and the ``block_m`` granule —
+    the M-only padding contract of the fused kernel.  ``denorm_scale``:
+    optional (out_dim,) fp32 row multiplied after the head scale inside the
+    kernel (the serving engine's denormalize epilogue, fused).
+    """
+    if not isinstance(net, PaddedIntNet):
+        net = prepad_int_layers(net)
+    m = int(x.shape[0])
+    block_m = max(8, min(int(block_m), -(-m // 8) * 8))
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), net.in_dim_p, 1), block_m, 0)
+    packed = net.packed
+    has_denorm = denorm_scale is not None
+    if has_denorm:
+        np_last = packed[-3].shape[1]
+        drow = _pad_to(jnp.asarray(denorm_scale, jnp.float32), np_last, 0)
+        packed = packed + (drow.reshape(1, -1),)
+    out = fused_forward_call(xp, net.s_in, *packed, n_layers=net.n_layers,
+                             block_m=block_m, interpret=interpret,
+                             has_denorm=has_denorm)
+    return out[:m, :net.out_dim]
+
+
+# ---------------------------------------------------------------------------
+# Layered per-layer kernel chain (the original path, kept as reference).
+# ---------------------------------------------------------------------------
+
+def int_forward_pallas(int_layers, x, *, interpret: bool | None = None,
+                       prepadded: PaddedIntNet | None = None):
+    """Full-integer MRF inference through the per-layer Pallas kernel chain.
+
+    With ``prepadded`` (built once at artifact load), weights skip their
+    per-call K/N padding and activations stay on the padded grid between
+    layers, so each call pads M once at entry instead of every operand at
+    every layer.
+    """
     from repro.core.qat import quantize_input
+
+    if prepadded is not None:
+        m = int(x.shape[0])
+        h = quantize_input(x, prepadded.s_in)
+        h = _pad_to(_pad_to(h, prepadded.in_dim_p, 1), 128, 0)
+        for i in range(prepadded.n_layers):
+            wp, bp, sp = prepadded.packed[3 * i:3 * i + 3]
+            last = i == prepadded.n_layers - 1
+            h = qat_dense_call(h, wp, bp.reshape(-1), sp.reshape(-1),
+                               relu=not last, float_out=last,
+                               interpret=interpret)
+        return h[:m, :prepadded.out_dim]
 
     h = quantize_input(x, int_layers[0].s_in)
     for i, layer in enumerate(int_layers):

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis.hlo_cost import analyze_hlo
-from repro.analysis.roofline import roofline_terms
+from repro.analysis.roofline import (model_flops_decode, model_flops_train,
+                                     roofline_terms)
 from repro.configs import cells_for, get_config, lm_archs
 from repro.configs.base import ModelConfig, ShapeCell, active_param_count, param_count
 from repro.dist.sharding import use_rules
@@ -202,9 +203,9 @@ def lower_cell(cfg: ModelConfig, cell: ShapeCell, mesh, *,
     n_total = param_count(cfg)
     tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
     if cell.kind == "train":
-        model_flops = 6.0 * n_active * tokens
+        model_flops = model_flops_train(n_active, tokens)
     else:
-        model_flops = 2.0 * n_active * tokens
+        model_flops = model_flops_decode(n_active, tokens)
     int8_frac = (float(hc.get("flops_int8", 0.0)) / flops) if flops else 0.0
     record["hlo_cost"]["flops_int8"] = hc.get("flops_int8", 0.0)
     record["params"] = {"total": n_total, "active": n_active}

@@ -133,13 +133,20 @@ def run_mrf_serve(args, cfg) -> int:
     ints = params = None
     if backend == "int8":
         ints = _obtain_int8_artifact(args, cfg)
-        net_kw = dict(backend="int8", int_layers=ints)
+        impl = None if args.int8_impl == "auto" else args.int8_impl
+        net_kw = dict(backend="int8", int_layers=ints, int8_impl=impl)
     else:
+        if args.int8_impl != "auto":
+            raise SystemExit("--int8-impl selects the full-integer "
+                             "implementation; it requires --backend int8")
         params, _, _ = _train_mrf(args, cfg, qat_mode=False)
         net_kw = dict(backend="float", params=params)
     engine = ReconEngine(mode=args.serve_mode,
                          max_wave_voxels=args.max_wave_voxels,
                          max_wait_ms=args.max_wait_ms, **net_kw)
+    if backend == "int8":
+        print(f"int8 impl: {engine.int8_impl} "
+              f"(requested {args.int8_impl})")
 
     # request pool: one phantom slice per request, distinct noise draws
     seq = default_sequence(cfg.mrf_n_frames)
@@ -219,6 +226,15 @@ def main(argv=None):
     # mrf-family knobs
     ap.add_argument("--backend", default="float",
                     help="mrf-* archs: float | int8 (full-integer Pallas)")
+    ap.add_argument("--int8-impl", default="auto",
+                    choices=["auto", "fused", "lax", "layered"],
+                    help="mrf int8: full-integer implementation — fused = "
+                         "whole-network Pallas kernel (TPU deployment "
+                         "path), lax = vectorized pure-lax fallback (the "
+                         "fast path off-TPU), layered = per-layer kernel "
+                         "chain (measured baseline); auto picks per rig. "
+                         "All bit-exact vs the qat.int_forward oracle "
+                         "(checked below)")
     ap.add_argument("--serve-mode", default="sync",
                     choices=["sync", "pipelined"],
                     help="mrf: sync = per-tile retirement baseline; "

@@ -47,15 +47,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mrf_net
-from repro.data.pipeline import denormalize_targets
+from repro.data.pipeline import T1_RANGE_MS, T2_RANGE_MS, denormalize_targets
 from repro.dist.sharding import shard
-from repro.kernels.common import jit_cache_size
-from repro.kernels.qat_dense.ops import int_forward_pallas
+from repro.kernels.common import jit_cache_size, resolve_int8_impl
+from repro.kernels.qat_dense.ops import (int_forward_fused, int_forward_lax,
+                                         int_forward_pallas,
+                                         prepad_int_layers)
 
 BACKENDS = ("float", "int8")
 
 # Power-of-two multiples of the 128-lane MXU tile: four shapes cover any
-# request mix (full tiles at 1024, tail padded to the smallest fit).
+# request mix (full tiles at 1024, tail padded to the smallest fit).  This
+# is the *fallback* set — production deployments derive the bucket set from
+# the recorded request-size distribution instead (``executor.request_sizes``
+# feeds ``benchmarks.serve_autotune``, which measures per-bucket tile cost
+# on the rig and picks the set minimizing wall time over the trace).
 DEFAULT_BUCKETS = (128, 256, 512, 1024)
 
 
@@ -125,11 +131,23 @@ class WaveExecutor:
     ``backend="int8"`` needs ``int_layers`` (a ``qat.export_int8`` /
     ``qat.load_int8_artifact`` list).  ``interpret=None`` auto-detects the
     Pallas mode (compiled on TPU, interpreter elsewhere).
+
+    ``int8_impl`` picks the full-integer implementation (``None`` = fastest
+    for the rig, see ``kernels.common.resolve_int8_impl``): ``"fused"`` is
+    the whole-network Pallas kernel — weights pre-padded once here at
+    artifact load, resident in VMEM across the forward, denormalize fused
+    into the kernel epilogue; ``"lax"`` is the vectorized pure-lax forward
+    (no Pallas dispatch — the fast path on CPU/GPU where the interpreter
+    would be the bottleneck); ``"layered"`` is the original per-layer
+    kernel chain.  All three serve bit-identical maps (tested against the
+    ``qat.int_forward`` oracle).  ``int8_block_m`` sets the fused kernel's
+    voxel-tile granule (default: one tile per bucket, capped at 512).
     """
 
     def __init__(self, *, backend: str = "float", params=None, int_layers=None,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, int8_impl: str | None = None,
+                 int8_block_m: int | None = None):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
         if backend == "float" and params is None:
@@ -142,30 +160,58 @@ class WaveExecutor:
         self.int_layers = int_layers
         self.buckets = tuple(sorted(int(b) for b in buckets))
         self.interpret = interpret
+        self.int8_impl = (resolve_int8_impl(int8_impl)
+                          if backend == "int8" else None)
+        self.int8_block_m = int8_block_m
+        # weights are static: pad K/N to the MXU grid exactly once at
+        # artifact load (the per-call cost is then M-only padding)
+        self._prepadded = (prepad_int_layers(int_layers)
+                           if backend == "int8" else None)
         self.in_dim = int(params[0]["w"].shape[0] if backend == "float"
                           else int_layers[0].w_q.shape[0])
         self._fwd = self._make_forward()
         self.bucket_shapes_run: set = set()
+        # recorded request-size distribution (voxel counts of every request
+        # dispatched) — the input to measured bucket autotuning
+        self.request_sizes: list = []
 
     def _make_forward(self):
         # denormalization stays centralized in data.pipeline
-        # .denormalize_targets but runs *inside* the jitted forward: the
-        # elementwise rescale fuses on device, so tile outputs are already
-        # (T1, T2) in ms and each wave crosses the host boundary exactly
-        # once (no post-sync device round-trip to rescale)
+        # .denormalize_targets but runs *inside* the jitted forward (or the
+        # fused kernel's epilogue): the elementwise rescale fuses on device,
+        # so tile outputs are already (T1, T2) in ms and each wave crosses
+        # the host boundary exactly once (no post-sync round-trip to rescale)
         if self.backend == "float":
             params = self.params
 
             def fwd(x):
                 return denormalize_targets(
                     mrf_net.forward(params, shard(x, "batch", None)))
-        else:
-            ints, interp = self.int_layers, self.interpret
+        elif self.int8_impl == "fused":
+            pre, interp = self._prepadded, self.interpret
+            block_m = self.int8_block_m or 512
+            # the same (T1_max, T2_max) row denormalize_targets applies,
+            # multiplied after the head scale inside the kernel — bit-exact
+            # vs composing denormalize_targets outside (tested)
+            dscale = jnp.array([T1_RANGE_MS[1], T2_RANGE_MS[1]], jnp.float32)
+
+            def fwd(x):
+                return int_forward_fused(pre, shard(x, "batch", None),
+                                         block_m=block_m, interpret=interp,
+                                         denorm_scale=dscale)
+        elif self.int8_impl == "lax":
+            ints = self.int_layers
+
+            def fwd(x):
+                return denormalize_targets(
+                    int_forward_lax(ints, shard(x, "batch", None)))
+        else:  # "layered": per-layer kernel chain on the prepadded net
+            ints, interp, pre = self.int_layers, self.interpret, self._prepadded
 
             def fwd(x):
                 return denormalize_targets(
                     int_forward_pallas(ints, shard(x, "batch", None),
-                                       interpret=interp))
+                                       interpret=interp, prepadded=pre))
         return jax.jit(fwd)
 
     def cache_size(self) -> int:
@@ -185,6 +231,7 @@ class WaveExecutor:
         part of staging and every tile is then a static-shape slice.
         """
         counts = [int(f.shape[0]) for f in features_list]
+        self.request_sizes.extend(counts)
         total = sum(counts)
         tiles = plan_tiles(total, self.buckets)
         padded_total = (tiles[-1][0] + tiles[-1][2]) if tiles else 0

@@ -14,10 +14,11 @@ three-layer stack; this module is the top:
   :class:`WaveExecutor`: MXU-aligned pad-to-bucket tiling (fixed shape set,
   jit cache bounded by the bucket count), device-side staging, asynchronous
   tile dispatch with one host sync per wave, float (``mrf_net.forward``) or
-  full-integer int8 (``kernels.qat_dense.int_forward_pallas``) backends,
-  batch axis ``dist.shard``-annotated so the same stack serves mesh-less or
-  data-parallel (build the engine inside ``use_rules``; ambient rules are
-  captured at first trace).
+  full-integer int8 backends (``int8_impl`` picks the fused whole-network
+  kernel, the pure-lax fallback, or the layered kernel chain — all
+  bit-exact vs ``qat.int_forward``), batch axis ``dist.shard``-annotated so
+  the same stack serves mesh-less or data-parallel (build the engine inside
+  ``use_rules``; ambient rules are captured at first trace).
 * **Engine** (here) — :class:`ReconEngine` composes the two.
   ``mode="pipelined"`` keeps up to ``inflight_depth`` waves in flight, so
   staging of wave N+1 overlaps device compute of wave N and each wave costs
@@ -106,8 +107,11 @@ class ReconEngine:
     retirement, the baseline; "pipelined" = up to ``inflight_depth`` waves
     in flight, one host sync per wave); ``max_wave_voxels`` caps a wave,
     ``max_wait_ms`` is the admission deadline from enqueue (see
-    ``serve.queue``).  Defaults (no cap, no deadline, sync) make
-    :meth:`reconstruct` behave exactly like the pre-queue engine.
+    ``serve.queue``).  ``int8_impl`` / ``int8_block_m`` select the int8
+    implementation and the fused kernel's voxel tile (``None`` = fastest
+    for the rig; see :class:`WaveExecutor`).  Defaults (no cap, no
+    deadline, sync) make :meth:`reconstruct` behave exactly like the
+    pre-queue engine.
     """
 
     def __init__(self, *, backend: str = "float", params=None, int_layers=None,
@@ -115,6 +119,7 @@ class ReconEngine:
                  interpret: bool | None = None, mode: str = "sync",
                  max_wave_voxels: int | None = None,
                  max_wait_ms: float | None = None, inflight_depth: int = 2,
+                 int8_impl: str | None = None, int8_block_m: int | None = None,
                  clock=time.perf_counter):
         if mode not in MODES:
             raise ValueError(f"mode {mode!r} not in {MODES}")
@@ -123,7 +128,8 @@ class ReconEngine:
         self.mode = mode
         self.executor = WaveExecutor(backend=backend, params=params,
                                      int_layers=int_layers, buckets=buckets,
-                                     interpret=interpret)
+                                     interpret=interpret, int8_impl=int8_impl,
+                                     int8_block_m=int8_block_m)
         # one time source for enqueue stamps AND completion stamps, so an
         # injected test clock yields coherent latencies
         self._clock = clock
@@ -178,6 +184,16 @@ class ReconEngine:
     @property
     def in_dim(self) -> int:
         return self.executor.in_dim
+
+    @property
+    def int8_impl(self) -> str | None:
+        return self.executor.int8_impl
+
+    @property
+    def request_sizes(self) -> list:
+        """Voxel counts of every request dispatched — the recorded size
+        distribution that feeds measured bucket autotuning."""
+        return self.executor.request_sizes
 
     @property
     def bucket_shapes_run(self) -> set:

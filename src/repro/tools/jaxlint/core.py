@@ -57,9 +57,10 @@ class LintConfig:
     batch_param_names: tuple = BATCH_PARAM_NAMES
     #: modules whose public entry points the SHARD rule audits
     shard_module_prefixes: tuple = ("repro/serve/", "repro/train/")
-    #: files the PALLASTILE rule audits
+    #: files the PALLASTILE rule audits (str.endswith takes the tuple:
+    #: per-layer kernels live in kernel.py, whole-network ones in fused.py)
     kernel_path_prefix: str = "repro/kernels/"
-    kernel_file_suffix: str = "kernel.py"
+    kernel_file_suffix: tuple = ("kernel.py", "fused.py")
     #: TPU tiling contract: last dim % lane, second-to-last % sublane
     lane: int = 128
     sublane: int = 8

@@ -1,0 +1,182 @@
+"""Direct unit coverage for the analysis layer (hlo_cost + roofline) and
+the measured-autotune scoring logic it feeds.
+
+``analyze_hlo`` is checked against a *real* compiled module (flops of a
+jitted matmul are known in closed form, and an int8 dot must land in
+``flops_int8``) plus a synthetic while-loop module for trip-count
+multiplication.  ``roofline_terms`` is checked as arithmetic.  The
+autotune pieces (candidate generation / trace scoring / bucket selection /
+VMEM block model) are pure given an injected timing function, so they are
+tested without timing anything.
+"""
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.hlo_cost import analyze_hlo
+from repro.analysis.roofline import (TPU_V5E, model_flops_decode,
+                                     model_flops_train, roofline_terms)
+
+jax.config.update("jax_platform_name", "cpu")
+
+sys.path.insert(0, ".")  # benchmarks/ is repo-root level, not a package
+from benchmarks import serve_autotune  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# analyze_hlo on real compiled modules
+# ---------------------------------------------------------------------------
+
+def _hlo_of(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_analyze_hlo_matmul_flops_exact():
+    """A lone (M,K)@(K,N) dot costs exactly 2*M*N*K flops."""
+    m, k, n = 64, 128, 32
+    a = jnp.zeros((m, k), jnp.float32)
+    b = jnp.zeros((k, n), jnp.float32)
+    hc = analyze_hlo(_hlo_of(lambda a, b: a @ b, a, b))
+    assert hc["flops"] == 2.0 * m * n * k
+    assert hc["flops_int8"] == 0.0
+
+
+def test_analyze_hlo_int8_dot_fraction():
+    """An s8 x s8 dot's flops land in flops_int8 (the 2x MXU path).
+
+    Synthetic module: XLA-CPU widens s8 operands to s32 before its dot (so
+    a CPU-compiled module never shows an s8 dot), but TPU/Mosaic modules
+    keep them s8 — the classification is exercised on HLO as the TPU
+    emits it.
+    """
+    hlo = """
+HloModule m
+
+ENTRY %main (a: s8[16,64], b: s8[64,8]) -> s32[16,8] {
+  %a = s8[16,64]{1,0} parameter(0)
+  %b = s8[64,8]{1,0} parameter(1)
+  ROOT %d = s32[16,8]{1,0} dot(s8[16,64]{1,0} %a, s8[64,8]{1,0} %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    hc = analyze_hlo(hlo)
+    assert hc["flops"] == 2.0 * 16 * 8 * 64
+    assert hc["flops_int8"] == hc["flops"]
+
+
+def test_analyze_hlo_while_trip_count():
+    """A known_trip_count while multiplies its body's dot flops."""
+    hlo = """
+HloModule m
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[8,8]{1,0}) %p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element((s32[], f32[8,8]{1,0}) %p), index=1
+  %d = f32[8,8]{1,0} dot(f32[8,8]{1,0} %x, f32[8,8]{1,0} %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(s32[] %i, f32[8,8]{1,0} %d)
+}
+
+%cond (q: (s32[], f32[8,8])) -> pred[] {
+  %q = (s32[], f32[8,8]{1,0}) parameter(0)
+  %j = s32[] get-tuple-element((s32[], f32[8,8]{1,0}) %q), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(s32[] %j, s32[] %c), direction=LT
+}
+
+ENTRY %main (a: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %a = (s32[], f32[8,8]{1,0}) parameter(0)
+  ROOT %w = (s32[], f32[8,8]{1,0}) while((s32[], f32[8,8]{1,0}) %a), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+}
+"""
+    hc = analyze_hlo(hlo)
+    assert hc["flops"] == 5 * 2.0 * 8 * 8 * 8
+
+
+# ---------------------------------------------------------------------------
+# roofline_terms arithmetic
+# ---------------------------------------------------------------------------
+
+def test_roofline_terms_arithmetic():
+    r = roofline_terms(flops_per_device=TPU_V5E["peak_bf16_flops"],
+                       bytes_per_device=0.0,
+                       collective_bytes_per_device=0.0, chips=1)
+    assert r["t_compute_s"] == pytest.approx(1.0)
+    assert r["dominant"] == "compute"
+    assert r["roofline_fraction"] == pytest.approx(1.0)
+
+
+def test_roofline_int8_fraction_halves_compute():
+    """Full-int8 flops run at 2x the bf16 rate, so t_compute halves."""
+    f = TPU_V5E["peak_bf16_flops"]
+    t_f32 = roofline_terms(flops_per_device=f, bytes_per_device=0,
+                           collective_bytes_per_device=0, chips=1)
+    t_i8 = roofline_terms(flops_per_device=f, bytes_per_device=0,
+                          collective_bytes_per_device=0, chips=1,
+                          int8_fraction=1.0)
+    assert t_i8["t_compute_s"] == pytest.approx(t_f32["t_compute_s"] / 2)
+
+
+def test_model_flops_formulas():
+    assert model_flops_train(10, 5) == 300.0   # 6 N D
+    assert model_flops_decode(10, 5) == 100.0  # 2 N D
+
+
+# ---------------------------------------------------------------------------
+# autotune: pure logic under an injected timing model
+# ---------------------------------------------------------------------------
+
+def test_candidate_sets_lane_aligned_and_bounded():
+    sizes = [700, 1024, 333, 96, 2048, 1500, 811, 64]
+    cands = serve_autotune.candidate_bucket_sets(sizes)
+    assert any(list(c) == [128, 256, 512, 1024] for c in cands)  # control
+    for c in cands:
+        assert 1 <= len(c) <= serve_autotune.MAX_BUCKETS
+        assert all(b % serve_autotune.LANE == 0 for b in c)
+        assert list(c) == sorted(set(c))
+
+
+def test_trace_cost_charges_planned_tiles():
+    # 300 on buckets (128, 256): two tiles of 256 then... plan_tiles: one
+    # full 256 tile + remainder 44 -> 128 tile
+    times = {128: 1.0, 256: 1.5}
+    assert serve_autotune.trace_cost([300], (128, 256), times) == 2.5
+    assert serve_autotune.trace_cost([100, 100], (128, 256), times) == 2.0
+
+
+def test_tune_buckets_picks_measured_argmin():
+    """Under a linear cost model with a fixed per-tile launch overhead, the
+    tuner must prefer buckets that pad less over the trace."""
+    sizes = [700] * 8  # every request pads 1024-700 = 324 under the default
+
+    def time_buckets(buckets):
+        # launch overhead + linear voxel cost: padding is pure waste
+        return {b: 1.0 + b * 0.01 for b in buckets}
+
+    out = serve_autotune.tune_buckets(sizes, time_buckets)
+    assert 768 in out["buckets"]  # 700 aligns up to 768, not 1024
+    best_cost = out["predicted_trace_s"]
+    default_cost = next(c["predicted_trace_s"] for c in out["candidates"]
+                        if c["buckets"] == [128, 256, 512, 1024])
+    assert best_cost <= default_cost
+    assert out["candidates"] == sorted(out["candidates"],
+                                       key=lambda c: c["predicted_trace_s"])
+
+
+def test_pick_block_m_respects_vmem_budget():
+    widths = (128, 128, 128)
+    out = serve_autotune.pick_block_m(128, widths)
+    bm = out["block_m"]
+    assert out["footprint_bytes"][str(bm)] <= out["vmem_budget_bytes"]
+    # a tiny budget degrades to the smallest candidate, never crashes
+    tiny = serve_autotune.pick_block_m(128, widths, vmem_bytes=1024)
+    assert tiny["block_m"] == 128
+
+
+def test_fused_vmem_bytes_monotone_in_block_m():
+    widths = (128, 128)
+    vals = [serve_autotune.fused_vmem_bytes(bm, 128, widths)
+            for bm in (128, 256, 512)]
+    assert vals == sorted(vals)

@@ -106,6 +106,45 @@ def test_int8_engine_matches_oracle_bitexact():
     assert np.array_equal(res.t2_ms, want[:, 1])
 
 
+@pytest.mark.parametrize("impl", ["fused", "lax", "layered"])
+def test_int8_impls_serve_identical_maps(impl):
+    """Every int8 implementation (fused whole-network kernel, pure-lax
+    fallback, layered chain) serves the oracle's bits through the engine —
+    switching impl can never change a reconstructed map."""
+    _, _, ints = _calibrated_net()
+    engine = ReconEngine(backend="int8", int_layers=ints, int8_impl=impl)
+    assert engine.int8_impl == impl
+    x = _features(333, seed=9)
+    res, = engine.reconstruct([ReconRequest(features=x)])
+    want = np.asarray(denormalize_targets(qat.int_forward(ints, x)))
+    assert np.array_equal(res.t1_ms, want[:, 0])
+    assert np.array_equal(res.t2_ms, want[:, 1])
+
+
+def test_int8_impl_resolution_and_validation():
+    _, _, ints = _calibrated_net()
+    with pytest.raises(ValueError, match="int8 impl"):
+        ReconEngine(backend="int8", int_layers=ints, int8_impl="tensorrt")
+    # None resolves per rig: Pallas-compiled fused on TPU, lax elsewhere
+    engine = ReconEngine(backend="int8", int_layers=ints)
+    expect = "fused" if jax.default_backend() == "tpu" else "lax"
+    assert engine.int8_impl == expect
+    # a float engine has no int8 impl
+    params, _, _ = _calibrated_net()
+    assert ReconEngine(backend="float", params=params).int8_impl is None
+
+
+def test_executor_records_request_size_distribution():
+    """Every dispatched request's voxel count lands in request_sizes — the
+    input to measured bucket autotuning."""
+    params, _, _ = _calibrated_net()
+    engine = ReconEngine(backend="float", params=params)
+    engine.reconstruct([ReconRequest(features=_features(n, seed=n))
+                        for n in (7, 333, 64)])
+    engine.reconstruct([ReconRequest(features=_features(130, seed=130))])
+    assert engine.request_sizes == [7, 333, 64, 130]
+
+
 def test_masked_reassembly_and_background():
     params, _, _ = _calibrated_net()
     engine = ReconEngine(backend="float", params=params)
