@@ -3,9 +3,21 @@
 
 Usage, from anywhere in the repo:
 
-    python scripts/check_lints.py                  # lint src/, exit 1 on
-                                                   # unsuppressed findings
+    python scripts/check_lints.py                  # lint src/ + benchmarks/
+                                                   # examples/ scripts/, exit 1
+                                                   # on unsuppressed findings
     python scripts/check_lints.py --github         # ::error annotations
+    python scripts/check_lints.py --format sarif   # SARIF 2.1.0 on stdout
+    python scripts/check_lints.py --cache .jaxlint-cache.json
+                                                   # incremental: re-analyze
+                                                   # only changed files + their
+                                                   # reverse-import closure
+    python scripts/check_lints.py --jobs 4         # parse/per-file in parallel
+    python scripts/check_lints.py --report dead-exports \
+        --allowlist scripts/dead_exports_allowlist.txt
+                                                   # CI gate: fail on dead
+                                                   # exports not allowlisted
+                                                   # AND on stale entries
     python scripts/check_lints.py --report dead-exports   # informational
     python scripts/check_lints.py --list-rules
 """

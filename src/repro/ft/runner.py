@@ -89,7 +89,8 @@ def run(train_step: Callable, init_state, batches: Callable[[int], Any],
     # than reuse (already-donated) init_state.
     from repro.ft.checkpoint import latest_step, save_state
     if latest_step(cfg.ckpt_dir) is None:
-        save_state(init_state, cfg.ckpt_dir, 0, async_io=False)
+        save_state(init_state, cfg.ckpt_dir, 0,  # jaxlint: disable=HOSTSYNC -- step-0 checkpoint runs before the loop starts; syncing here is the point
+                   async_io=False)
 
     while True:
         restored, start = mgr.restore_latest(init_state, shardings)

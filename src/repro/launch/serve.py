@@ -38,15 +38,15 @@ def run_token_serve(args, cfg) -> int:
     serve = jax.jit(make_serve_step(fns))
 
     b, s = args.requests, args.prompt_len
-    key = jax.random.PRNGKey(1)
-    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size,
+    k_tok, k_vlm, k_enc = jax.random.split(jax.random.PRNGKey(1), 3)
+    batch = {"tokens": jax.random.randint(k_tok, (b, s), 0, cfg.vocab_size,
                                           jnp.int32)}
     if cfg.family == "vlm":
         batch["prefix_embeds"] = 0.02 * jax.random.normal(
-            key, (b, cfg.n_prefix_embeds, cfg.d_model), jnp.bfloat16)
+            k_vlm, (b, cfg.n_prefix_embeds, cfg.d_model), jnp.bfloat16)
     if cfg.family == "encdec":
         batch["frames"] = 0.02 * jax.random.normal(
-            key, (b, enc_len_for(s), cfg.d_model), jnp.bfloat16)
+            k_enc, (b, enc_len_for(s), cfg.d_model), jnp.bfloat16)
 
     # warmup: compile prefill + decode outside the timed region so
     # t_prefill / t_decode measure steady-state serving, not XLA compiles

@@ -23,6 +23,11 @@ import pathlib
 SCAN_DIRS = ("src", "tests", "scripts", "benchmarks", "examples",
              "experiments")
 
+#: repo-relative prefixes excluded from the scan: lint fixtures are
+#: deliberately synthetic (jaxlint's project fixtures are mini-repos whose
+#: ``repro.*`` modules exist only inside the fixture tree)
+EXCLUDE_PREFIXES = ("tests/fixtures/",)
+
 
 def _module_exists(src_root: pathlib.Path, module: str) -> bool:
     path = src_root.joinpath(*module.split("."))
@@ -58,6 +63,9 @@ def find_missing_imports(repo_root: pathlib.Path) -> list[str]:
         if not base.is_dir():
             continue
         for py in sorted(base.rglob("*.py")):
+            rel = py.relative_to(repo_root).as_posix()
+            if any(rel.startswith(p) for p in EXCLUDE_PREFIXES):
+                continue
             try:
                 tree = ast.parse(py.read_text(), filename=str(py))
             except SyntaxError as e:

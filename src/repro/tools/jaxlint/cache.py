@@ -1,0 +1,117 @@
+"""Content-hash incremental cache for whole-program lint runs.
+
+The contract that makes caching sound is the project passes' attribution
+discipline (see ``core`` docstring): every finding is attributed to the
+file whose analysis produced it — the caller for cross-module taint, the
+entry point's file for reachability — and that analysis reads only the
+file itself plus its *import closure*.  A file's findings are therefore a
+pure function of (its content, the contents of its transitive imports,
+the analyzer config/rule set), and the invalidation rule is:
+
+    dirty(f)  =  hash(f) changed
+              or f is new / a cached dep of f was deleted
+              or any file in f's current import closure is dirty
+
+Graph edges invalidate dependents: editing ``data/pipeline.py`` re-lints
+``train/step.py`` (which imports it) but not ``serve/queue.py``.  The
+cache file (``--cache .jaxlint-cache.json``) stores per file: content
+hash, direct intra-project deps, and the *post-pragma* findings (pragmas
+are file content, so the hash covers them).  A config or rule-set change
+flips the global fingerprint and invalidates everything.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import pathlib
+
+VERSION = 2
+
+
+def content_hash(source: str) -> str:
+    return hashlib.sha256(source.encode("utf-8", "replace")).hexdigest()
+
+
+def _fingerprint(config) -> str:
+    from repro.tools.jaxlint.core import RULES
+    blob = f"v{VERSION}|{sorted(RULES)}|{config!r}"
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def load(cache_path, config) -> dict | None:
+    """Parsed cache data, or None when absent/invalid/stale-fingerprint."""
+    try:
+        data = json.loads(pathlib.Path(cache_path).read_text())
+    except (OSError, ValueError):
+        return None
+    if not isinstance(data, dict) or data.get("version") != VERSION \
+            or data.get("fingerprint") != _fingerprint(config) \
+            or not isinstance(data.get("files"), dict):
+        return None
+    return data
+
+
+def plan(cached: dict | None, hashes: dict, deps: dict
+         ) -> tuple[set, dict]:
+    """(dirty paths to re-analyze, {clean path: cached findings}).
+
+    ``hashes`` is the current content hash per file; ``deps`` the current
+    direct intra-project import edges.
+    """
+    from repro.tools.jaxlint.core import Finding
+
+    if cached is None:
+        return set(hashes), {}
+    cfiles = cached["files"]
+    changed = set()
+    for path, h in hashes.items():
+        entry = cfiles.get(path)
+        if entry is None or entry.get("hash") != h:
+            changed.add(path)
+        elif any(d not in hashes for d in entry.get("deps", ())):
+            changed.add(path)  # a dependency was deleted or moved
+
+    # propagate along reverse import edges: dependents of changed files
+    rev: dict[str, set] = {}
+    for path, ds in deps.items():
+        for d in ds:
+            rev.setdefault(d, set()).add(path)
+    dirty = set(changed)
+    stack = list(changed)
+    while stack:
+        for dep in rev.get(stack.pop(), ()):
+            if dep not in dirty:
+                dirty.add(dep)
+                stack.append(dep)
+
+    reused = {
+        path: [Finding(path, line, rule, message)
+               for line, rule, message in cfiles[path].get("findings", ())]
+        for path in hashes
+        if path not in dirty
+    }
+    return dirty, reused
+
+
+def save(cache_path, config, hashes: dict, deps: dict,
+         per_path: dict) -> None:
+    """Persist the run (best-effort: an unwritable cache never fails a
+    lint)."""
+    data = {
+        "version": VERSION,
+        "fingerprint": _fingerprint(config),
+        "files": {
+            path: {
+                "hash": h,
+                "deps": sorted(deps.get(path, ())),
+                "findings": [[f.line, f.rule, f.message]
+                             for f in per_path.get(path, ())],
+            }
+            for path, h in hashes.items()
+        },
+    }
+    try:
+        pathlib.Path(cache_path).write_text(json.dumps(data, indent=1))
+    except OSError:
+        pass

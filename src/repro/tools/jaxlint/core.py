@@ -3,15 +3,28 @@
 A *rule* is a function ``check(ctx) -> Iterable[Finding]`` registered under
 an UPPERCASE name via :func:`register`; ``ctx`` is a :class:`FileContext`
 carrying the parsed tree, the config, and shared maps (qualnames, parents,
-module int constants).  The runner parses each file once, runs every rule,
-then applies per-line pragmas:
+module int constants).  A rule may additionally carry a *project pass*
+(:func:`register_project`): ``project_check(project, targets)`` runs once
+per lint with the whole-program :class:`~.projectgraph.Project` and makes
+the rule interprocedural — taint following calls into helper modules,
+donation crossing imports, sharding verified over the reachable call
+chain.  Project passes MUST attribute every finding to a file in
+``targets`` whose analysis produced it (the caller/entry-point file, never
+the callee) — that attribution discipline is what lets the incremental
+cache reuse per-file results (a file's findings depend only on its own
+content plus its import closure; see ``cache.py``).
+
+The runner parses each file once, runs every per-file rule, runs the
+project passes over the file set, then applies per-line pragmas:
 
     x = np.asarray(y)  # jaxlint: disable=HOSTSYNC -- sanctioned sync point
 
 A pragma suppresses the named rule(s) on its own line **only when it
 carries a trailing ``-- reason``** — a bare ``disable=RULE`` is inert and
 itself reported as a PRAGMA finding, as is a pragma naming an unknown
-rule.  PRAGMA findings cannot be suppressed.
+rule.  Several rules share one pragma (``disable=RULE1,RULE2 -- reason``)
+and several pragmas may sit on one line.  PRAGMA findings cannot be
+suppressed.
 """
 
 from __future__ import annotations
@@ -21,6 +34,8 @@ import ast
 import dataclasses
 import pathlib
 import re
+import sys
+import time
 from typing import Callable, Iterable
 
 #: hot-loop modules: HOSTSYNC applies only here (module-relative paths)
@@ -48,6 +63,13 @@ DTYPE_BYTES = {"float64": 8, "int64": 8, "float32": 4, "int32": 4,
                "uint32": 4, "bfloat16": 2, "float16": 2, "int16": 2,
                "int8": 1, "uint8": 1, "bool_": 1}
 
+#: directories linted in a repo scan besides ``src/`` (scoped ruleset is
+#: inherent: HOSTSYNC keys off hot_loop_modules, SHARD off
+#: shard_module_prefixes, PALLASTILE off kernel paths — none of which
+#: match these dirs, so they get TRACERBRANCH/DONATE/KEYREUSE/RECOMPILE/
+#: SCANCARRY plus pragma hygiene)
+EXTRA_SCAN_DIRS = ("benchmarks", "examples", "scripts")
+
 
 @dataclasses.dataclass(frozen=True)
 class LintConfig:
@@ -70,6 +92,8 @@ class LintConfig:
     #: bytes assumed for BlockSpec blocks whose dtype is not statically
     #: visible (scratch pltpu.VMEM(...) carries its dtype; operands don't)
     default_dtype_bytes: int = 4
+    #: max call depth interprocedural passes follow from their origin file
+    max_call_depth: int = 4
 
 
 @dataclasses.dataclass(frozen=True, order=True)
@@ -94,6 +118,11 @@ class Rule:
     name: str
     summary: str
     check: Callable
+    #: optional whole-program pass ``(project, targets) -> Iterable[Finding]``
+    project_check: Callable | None = None
+    #: True when the project pass *replaces* the per-file check in project
+    #: mode (the per-file check is the degraded single-file approximation)
+    project_replaces_file: bool = False
 
 
 RULES: dict[str, Rule] = {}
@@ -109,6 +138,7 @@ def register(name: str, summary: str):
     Adding a rule == writing one ``check(ctx)`` generator, registering it
     here, and dropping a positive + negative fixture pair under
     ``tests/fixtures/jaxlint/`` (test_jaxlint enforces the pairing).
+    Optionally attach a whole-program pass with :func:`register_project`.
     """
     if name != name.upper() or name == PRAGMA_RULE:
         raise ValueError(f"rule names are UPPERCASE and != PRAGMA: {name!r}")
@@ -117,6 +147,24 @@ def register(name: str, summary: str):
         if name in RULES:
             raise ValueError(f"duplicate rule {name}")
         RULES[name] = Rule(name=name, summary=summary, check=fn)
+        return fn
+
+    return deco
+
+
+def register_project(name: str, replaces_file: bool = False):
+    """Attach a project pass to an already-registered rule.
+
+    ``replaces_file=True`` means the per-file check is skipped in project
+    mode (e.g. SHARD's module-string-match is superseded by call-chain
+    reachability); default is *extends* (the pass only adds the
+    cross-module findings the per-file check cannot see).
+    """
+    def deco(fn):
+        if name not in RULES:
+            raise ValueError(f"project pass for unregistered rule {name}")
+        RULES[name] = dataclasses.replace(
+            RULES[name], project_check=fn, project_replaces_file=replaces_file)
         return fn
 
     return deco
@@ -185,7 +233,8 @@ class FileContext:
 
 
 _PRAGMA_RE = re.compile(
-    r"#\s*jaxlint:\s*disable=([A-Za-z0-9_,\s]+?)(?:\s*--\s*(\S.*))?\s*$")
+    r"#\s*jaxlint:\s*disable=([A-Za-z0-9_,\s]+?)(?:\s*--\s*([^#]*\S))?\s*"
+    r"(?=#|$)")
 
 
 def parse_pragmas(source: str, path: str
@@ -193,30 +242,31 @@ def parse_pragmas(source: str, path: str
     """(line -> suppressed rule names, pragma-syntax findings).
 
     A pragma only suppresses when it names known rules AND carries a
-    ``-- reason``; offenders become PRAGMA findings instead.
+    ``-- reason``; offenders become PRAGMA findings instead.  One pragma
+    may name several rules (``disable=A,B -- reason``) and one line may
+    carry several pragmas.
     """
     _load_rules()
     suppress: dict[int, set] = {}
     problems: list[Finding] = []
     for i, text in enumerate(source.splitlines(), start=1):
-        m = _PRAGMA_RE.search(text)
-        if not m:
-            continue
-        names = {n.strip().upper() for n in m.group(1).split(",") if n.strip()}
-        reason = m.group(2)
-        unknown = sorted(n for n in names if n not in RULES)
-        if unknown:
-            problems.append(Finding(
-                path, i, PRAGMA_RULE,
-                f"pragma names unknown rule(s) {', '.join(unknown)} "
-                f"(known: {', '.join(sorted(RULES))})"))
-        if not reason:
-            problems.append(Finding(
-                path, i, PRAGMA_RULE,
-                "pragma carries no reason — write `# jaxlint: "
-                "disable=RULE -- why this line is exempt`"))
-            continue  # reasonless pragmas are inert
-        suppress.setdefault(i, set()).update(names - set(unknown))
+        for m in _PRAGMA_RE.finditer(text):
+            names = {n.strip().upper()
+                     for n in m.group(1).split(",") if n.strip()}
+            reason = m.group(2)
+            unknown = sorted(n for n in names if n not in RULES)
+            if unknown:
+                problems.append(Finding(
+                    path, i, PRAGMA_RULE,
+                    f"pragma names unknown rule(s) {', '.join(unknown)} "
+                    f"(known: {', '.join(sorted(RULES))})"))
+            if not reason:
+                problems.append(Finding(
+                    path, i, PRAGMA_RULE,
+                    "pragma carries no reason — write `# jaxlint: "
+                    "disable=RULE -- why this line is exempt`"))
+                continue  # reasonless pragmas are inert
+            suppress.setdefault(i, set()).update(names - set(unknown))
     return suppress, problems
 
 
@@ -245,28 +295,169 @@ def collect_findings(source: str, path: str,
 
 def lint_source(source: str, path: str,
                 config: LintConfig | None = None) -> list[Finding]:
-    """Unsuppressed findings (rule findings minus reasoned pragmas, plus
-    pragma-syntax findings)."""
+    """Unsuppressed findings for one file in isolation (no project graph —
+    the v1 per-file view; cross-module contracts are invisible here)."""
     raw = collect_findings(source, path, config)
     suppress, problems = parse_pragmas(source, path)
     kept = [f for f in raw if f.rule not in suppress.get(f.line, set())]
     return sorted(kept + problems)
 
 
+# --- whole-program runner --------------------------------------------------
+
+@dataclasses.dataclass
+class LintStats:
+    total: int = 0          # files in the scan
+    analyzed: int = 0       # files actually re-analyzed this run
+    reused: int = 0         # files served from the incremental cache
+    seconds: float = 0.0
+
+    def line(self) -> str:
+        return (f"jaxlint: analyzed {self.analyzed}/{self.total} files "
+                f"({self.reused} from cache) in {self.seconds:.2f}s")
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: list
+    stats: LintStats
+
+
+def _file_raw_findings(path: str, source: str, config: LintConfig,
+                       in_project: bool) -> list[Finding]:
+    """Per-file rule findings (pragmas not applied).  ``in_project`` skips
+    rules whose project pass replaces the per-file check."""
+    _load_rules()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 1, "SYNTAX",
+                        f"syntax error prevents linting ({e.msg})")]
+    ctx = FileContext(path, source, tree, config)
+    out: list[Finding] = []
+    for rule in RULES.values():
+        if in_project and rule.project_replaces_file \
+                and rule.project_check is not None:
+            continue
+        out.extend(rule.check(ctx))
+    return out
+
+
+def _analyze_batch(args):
+    """Worker entry for ``--jobs``: analyze a batch of files."""
+    items, config = args
+    return [f for path, source in items
+            for f in _file_raw_findings(path, source, config, True)]
+
+
+def _parallel_file_findings(items: list, config: LintConfig,
+                            jobs: int) -> list[Finding]:
+    if jobs <= 1 or len(items) < 2:
+        return [f for path, source in items
+                for f in _file_raw_findings(path, source, config, True)]
+    try:
+        import concurrent.futures as cf
+        batches = [items[i::jobs] for i in range(jobs)]
+        batches = [b for b in batches if b]
+        with cf.ProcessPoolExecutor(max_workers=len(batches)) as pool:
+            chunks = list(pool.map(_analyze_batch,
+                                   [(b, config) for b in batches]))
+        return [f for chunk in chunks for f in chunk]
+    except Exception:  # sandboxed rigs without working multiprocessing
+        return [f for path, source in items
+                for f in _file_raw_findings(path, source, config, True)]
+
+
+def lint_project(files: dict, config: LintConfig | None = None,
+                 cache_path=None, jobs: int = 1) -> LintResult:
+    """Whole-program lint of ``{path: source}``.
+
+    Per-file rules + project passes, pragma application per file, and —
+    with ``cache_path`` — content-hash incremental reuse: a file is
+    re-analyzed only when its own content or a file in its import closure
+    changed (project-pass findings are attributed to the file whose
+    analysis produced them, so cached per-file results stay valid).
+    """
+    from repro.tools.jaxlint import cache as cachemod
+    from repro.tools.jaxlint.projectgraph import Project
+
+    _load_rules()
+    config = config or LintConfig()
+    t0 = time.perf_counter()
+    stats = LintStats(total=len(files))
+
+    contexts: dict = {}
+    syntax: dict[str, list[Finding]] = {}
+    for path, source in files.items():
+        try:
+            tree = ast.parse(source, filename=path)
+        except SyntaxError as e:
+            syntax[path] = [Finding(path, e.lineno or 1, "SYNTAX",
+                                    f"syntax error prevents linting "
+                                    f"({e.msg})")]
+            continue
+        contexts[path] = FileContext(path, source, tree, config)
+    project = Project(contexts, config)
+
+    deps = {path: project.deps(path) for path in contexts}
+    hashes = {path: cachemod.content_hash(src) for path, src in files.items()}
+    cached = cachemod.load(cache_path, config) if cache_path else None
+    dirty, reused = cachemod.plan(cached, hashes, deps)
+    stats.analyzed = len(dirty)
+    stats.reused = len(reused)
+
+    per_path: dict[str, list[Finding]] = dict(reused)
+    dirty_items = [(p, files[p]) for p in files if p in dirty]
+    raw = _parallel_file_findings(
+        [(p, s) for p, s in dirty_items if p in contexts], config, jobs)
+    for path in dirty:
+        raw.extend(syntax.get(path, ()))
+    for rule in RULES.values():
+        if rule.project_check is not None:
+            for f in rule.project_check(project, dirty):
+                # attribution discipline: project passes may only report
+                # into files being analyzed this run (see module docstring)
+                if f.path in dirty:
+                    raw.append(f)
+
+    by_path: dict[str, list[Finding]] = {p: [] for p in dirty}
+    for f in raw:
+        by_path.setdefault(f.path, []).append(f)
+    for path, flist in by_path.items():
+        source = files.get(path, "")
+        suppress, problems = parse_pragmas(source, path)
+        kept = [f for f in set(flist)
+                if f.rule not in suppress.get(f.line, set())]
+        per_path[path] = sorted(kept + problems)
+
+    if cache_path:
+        cachemod.save(cache_path, config, hashes, deps, per_path)
+
+    stats.seconds = time.perf_counter() - t0
+    findings = sorted(f for flist in per_path.values() for f in flist)
+    return LintResult(findings=findings, stats=stats)
+
+
 def iter_repo_files(repo_root: pathlib.Path) -> Iterable[pathlib.Path]:
-    src = pathlib.Path(repo_root) / "src"
-    if src.is_dir():
-        yield from sorted(src.rglob("*.py"))
-
-
-def lint_repo(repo_root, config: LintConfig | None = None) -> list[Finding]:
-    """Lint every python file under ``<repo_root>/src``."""
+    """Python files a repo scan lints: ``src/`` plus ``EXTRA_SCAN_DIRS``."""
     repo_root = pathlib.Path(repo_root)
-    findings: list[Finding] = []
-    for py in iter_repo_files(repo_root):
-        rel = py.relative_to(repo_root).as_posix()
-        findings.extend(lint_source(py.read_text(), rel, config))
-    return sorted(findings)
+    for top in ("src", *EXTRA_SCAN_DIRS):
+        base = repo_root / top
+        if base.is_dir():
+            yield from sorted(base.rglob("*.py"))
+
+
+def repo_files(repo_root) -> dict[str, str]:
+    repo_root = pathlib.Path(repo_root)
+    return {py.relative_to(repo_root).as_posix(): py.read_text()
+            for py in iter_repo_files(repo_root)}
+
+
+def lint_repo(repo_root, config: LintConfig | None = None,
+              cache_path=None, jobs: int = 1) -> list[Finding]:
+    """Whole-program lint of a repo checkout (see :func:`lint_project`)."""
+    return lint_project(repo_files(repo_root), config,
+                        cache_path=cache_path, jobs=jobs).findings
 
 
 def main(argv=None, repo_root: pathlib.Path | None = None) -> int:
@@ -277,11 +468,27 @@ def main(argv=None, repo_root: pathlib.Path | None = None) -> int:
         description="static analysis of the repo's jit/sharding/Pallas "
                     "performance contracts")
     ap.add_argument("--report", choices=("dead-exports",),
-                    help="emit an informational report instead of linting")
+                    help="emit a report instead of linting (with "
+                    "--allowlist, dead-exports becomes a CI gate)")
+    ap.add_argument("--allowlist", metavar="FILE",
+                    help="dead-exports allowlist file: gate mode — exit 1 "
+                    "on dead exports missing from the file and on stale "
+                    "entries")
+    ap.add_argument("--format", choices=("text", "github", "sarif"),
+                    default="text", dest="fmt",
+                    help="finding output format (sarif prints a SARIF "
+                    "2.1.0 run to stdout; the timing line goes to stderr)")
     ap.add_argument("--github", action="store_true",
-                    help="print findings as GitHub ::error annotations")
+                    help="alias for --format github")
+    ap.add_argument("--cache", metavar="FILE",
+                    help="incremental cache (e.g. .jaxlint-cache.json): "
+                    "only files whose content hash or import closure "
+                    "changed are re-analyzed")
+    ap.add_argument("--jobs", type=int, default=1, metavar="N",
+                    help="analyze files in N parallel processes")
     ap.add_argument("--list-rules", action="store_true")
     args = ap.parse_args(argv)
+    fmt = "github" if args.github else args.fmt
 
     if args.list_rules:
         for name, summary in sorted(available_rules().items()):
@@ -289,17 +496,32 @@ def main(argv=None, repo_root: pathlib.Path | None = None) -> int:
         return 0
 
     if args.report == "dead-exports":
-        from repro.tools.jaxlint.deadexports import dead_exports_report
+        from repro.tools.jaxlint.deadexports import (dead_exports_gate,
+                                                     dead_exports_report)
+        if args.allowlist:
+            lines, code = dead_exports_gate(repo_root, args.allowlist)
+            for line in lines:
+                print(line)
+            return code
         for line in dead_exports_report(repo_root):
             print(line)
         return 0
 
-    findings = lint_repo(repo_root)
+    result = lint_project(repo_files(repo_root),
+                          cache_path=args.cache, jobs=args.jobs)
+    findings = result.findings
+    print(result.stats.line(), file=sys.stderr)
+    if fmt == "sarif":
+        import json
+
+        from repro.tools.jaxlint.sarif import sarif_report
+        print(json.dumps(sarif_report(findings), indent=2))
+        return 1 if findings else 0
     if findings:
         print(f"jaxlint: {len(findings)} unsuppressed finding(s):")
         for f in findings:
-            print(f.github() if args.github else f"  {f.key}")
+            print(f.github() if fmt == "github" else f"  {f.key}")
         return 1
-    n_files = sum(1 for _ in iter_repo_files(repo_root))
-    print(f"jaxlint: clean ({n_files} files, {len(available_rules())} rules)")
+    print(f"jaxlint: clean ({result.stats.total} files, "
+          f"{len(available_rules())} rules)")
     return 0

@@ -1,11 +1,23 @@
 """Dead-public-API inventory: ``jaxlint --report dead-exports``.
 
 Lists public symbols defined under ``src/repro`` that no other file in the
-repo references, plus modules nothing imports.  This is a *report*, not a
-lint failure: dormant subsystems (``analysis/roofline`` driving the int8
-kernel sprint, ``optim/grad_compression`` awaiting the data-parallel
-gradient exchange) are named ROADMAP work — the report keeps them visible
-instead of letting them rot silently or forcing their deletion.
+repo references, plus modules nothing imports.  Dormant subsystems
+(``analysis/roofline`` driving the int8 kernel sprint,
+``optim/grad_compression`` awaiting the data-parallel gradient exchange)
+are named ROADMAP work — the report keeps them visible instead of letting
+them rot silently or forcing their deletion.
+
+With ``--allowlist FILE`` the report becomes a *CI gate*: every dead
+export must appear in the allowlist with a one-line reason, and every
+allowlist entry must still be dead — a symbol that gained a caller (or
+was deleted) makes its entry *stale* and fails the gate too, so the file
+can only ever describe the present.  Entry format, one per line::
+
+    repro.ft.elastic.survivor_mesh -- held for the elastic resume path
+    module:repro.launch.dryrun -- CLI-only entry point, imported by no one
+
+(`module:` prefixes a never-imported module; everything else is
+``module.symbol``.  ``#`` starts a comment.)
 
 Conservativeness: usage is identifier-based (any ``Name`` load, attribute
 access, or ``from X import name`` anywhere in the scan dirs counts), so a
@@ -125,3 +137,52 @@ def dead_exports_report(repo_root) -> list[str]:
     if not dead["modules"] and not dead["symbols"]:
         lines.append("no dead exports found")
     return lines
+
+
+def parse_allowlist(path) -> tuple[dict[str, str], list[str]]:
+    """{entry key: reason} plus problem lines (reasonless entries)."""
+    path = pathlib.Path(path)
+    entries: dict[str, str] = {}
+    problems: list[str] = []
+    for i, raw in enumerate(path.read_text().splitlines(), start=1):
+        line = raw.split("#", 1)[0].strip() if raw.lstrip().startswith("#") \
+            else raw.strip()
+        if not line:
+            continue
+        key, sep, reason = line.partition(" -- ")
+        key, reason = key.strip(), reason.strip()
+        if not sep or not reason:
+            problems.append(f"{path}:{i}: entry `{key}` carries no reason "
+                            f"— write `<name> -- why it stays`")
+        entries[key] = reason
+    return entries, problems
+
+
+def dead_exports_gate(repo_root, allowlist_path) -> tuple[list[str], int]:
+    """Gate lines + exit code: 1 on non-allowlisted dead exports, stale
+    allowlist entries, or reasonless entries."""
+    repo_root = pathlib.Path(repo_root)
+    allowlist_path = pathlib.Path(allowlist_path)
+    if not allowlist_path.is_file():
+        return [f"dead-exports gate: allowlist {allowlist_path} not found"], 1
+    dead = dead_exports(repo_root)
+    dead_keys: dict[str, str] = {}
+    for module, name, lineno in dead["symbols"]:
+        path = "src/" + module.replace(".", "/") + ".py"
+        dead_keys[f"{module}.{name}"] = f"{path}:{lineno}"
+    for m in dead["modules"]:
+        dead_keys[f"module:{m}"] = "src/" + m.replace(".", "/") + ".py"
+    entries, problems = parse_allowlist(allowlist_path)
+
+    lines = list(problems)
+    for key in sorted(set(dead_keys) - set(entries)):
+        lines.append(f"dead export not in the allowlist: {key} "
+                     f"({dead_keys[key]}) — wire it up, delete it, or add "
+                     f"it to {allowlist_path.name} with a reason")
+    for key in sorted(set(entries) - set(dead_keys)):
+        lines.append(f"stale allowlist entry: {key} is no longer a dead "
+                     f"export — remove it from {allowlist_path.name}")
+    if lines:
+        return lines, 1
+    return [f"dead-exports gate: clean ({len(dead_keys)} allowlisted, "
+            f"0 stale)"], 0

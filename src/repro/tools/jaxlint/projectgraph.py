@@ -1,0 +1,308 @@
+"""Whole-program layer for jaxlint: imports, call graph, cross-module maps.
+
+v1 analyzed one file at a time, so every contract that *threads* values
+across module boundaries was invisible: a traced step passing its loop
+counter into ``data/pipeline.batch_at``, donated ``TrainState`` handed to a
+helper imported from another module, a serve entry point whose sharding
+actually happens two calls away.  This module builds the shared
+whole-program facts once per lint run:
+
+* **module table** — ``src/repro/a/b.py`` <-> ``repro.a.b`` (files outside
+  ``src/`` — benchmarks, examples, scripts — participate as import *users*
+  only; nothing imports them);
+* **import table** — per file, local name -> (module, symbol) for every
+  intra-repo absolute import, including aliases and module bindings;
+* **function index + call resolution** — top-level defs, class methods,
+  one-hop ``f = functools.partial(g, ...)`` / ``f = jax.jit(g, ...)``
+  aliases; ``resolve_call`` maps a call expression to candidate
+  FunctionDefs anywhere in the project (local names, ``self.meth``,
+  ``alias.fn``, full dotted paths);
+* **reachability** — BFS over resolved calls + nested defs, used by the
+  SHARD project pass to verify the *reachable* chain hits ``dist.shard``;
+* **cross-module constant/donor/sync maps** consumed by the PALLASTILE /
+  DONATE / HOSTSYNC project passes.
+
+Resolution is static and name-based; what cannot be resolved contributes
+nothing (rules stay false-positive-averse, exactly like v1).  Everything
+here derives from a file's own source plus its transitive *imports* —
+never from its importers — which is the invariant the incremental cache
+relies on: a file's findings can only change when its content or its
+import closure changes (see ``cache.py``).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.tools.jaxlint.astutil import (dotted, is_jit_expr,
+                                         is_partial_expr, unwrap_partial)
+
+#: stop-gap bound on reachability BFS (defensive; real chains are short)
+MAX_REACH = 400
+
+
+def _module_of(path: str) -> str | None:
+    """Dotted module name for files under ``src/``; None otherwise."""
+    if not path.startswith("src/") or not path.endswith(".py"):
+        return None
+    mod = path[len("src/"):-len(".py")]
+    if mod.endswith("/__init__"):
+        mod = mod[: -len("/__init__")]
+    return mod.replace("/", ".")
+
+
+class Project:
+    """Parsed files + the cross-module maps the project passes share."""
+
+    def __init__(self, contexts: dict, config=None):
+        #: path -> FileContext (insertion order = scan order)
+        self.files = contexts
+        self.config = config
+        self.module_to_path: dict[str, str] = {}
+        for path in contexts:
+            mod = _module_of(path)
+            if mod is not None:
+                self.module_to_path[mod] = path
+        #: path -> {local name: (module, symbol | None)}; symbol None means
+        #: the local name is bound to the module itself
+        self.imports = {p: self._parse_imports(c.tree)
+                        for p, c in contexts.items()}
+        #: path -> extra dotted modules bound by plain ``import a.b.c``
+        self._plain = {p: self._plain_imports(c.tree)
+                       for p, c in contexts.items()}
+        self._defs = {p: self._index_defs(c.tree)
+                      for p, c in contexts.items()}
+        self._deps_cache: dict[str, set] = {}
+
+    # -- construction ------------------------------------------------------
+
+    def _parse_imports(self, tree) -> dict:
+        out: dict = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname and a.name in self.module_to_path:
+                        out[a.asname] = (a.name, None)
+            elif isinstance(node, ast.ImportFrom) and node.level == 0:
+                mod = node.module or ""
+                for a in node.names:
+                    sub = f"{mod}.{a.name}"
+                    if sub in self.module_to_path:
+                        out[a.asname or a.name] = (sub, None)
+                    elif mod in self.module_to_path:
+                        out[a.asname or a.name] = (mod, a.name)
+        return out
+
+    def _plain_imports(self, tree) -> set:
+        out: set = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if not a.asname and a.name in self.module_to_path:
+                        out.add(a.name)
+        return out
+
+    @staticmethod
+    def _index_defs(tree) -> dict:
+        """{"defs": name->FunctionDef, "classes": cls->{meth->FunctionDef},
+        "aliases": name->name (partial/jit one-hop)}."""
+        defs: dict = {}
+        classes: dict = {}
+        aliases: dict = {}
+        for stmt in tree.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs[stmt.name] = stmt
+            elif isinstance(stmt, ast.ClassDef):
+                classes[stmt.name] = {
+                    s.name: s for s in stmt.body
+                    if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef))}
+            elif isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name) \
+                    and isinstance(stmt.value, ast.Call):
+                call = stmt.value
+                inner = None
+                if is_partial_expr(call.func) and call.args:
+                    inner = call.args[0]
+                elif is_jit_expr(call.func) and call.args:
+                    inner = call.args[0]
+                    if isinstance(inner, ast.Call):  # jit(partial(f, ...))
+                        inner, _ = unwrap_partial(inner)
+                if isinstance(inner, ast.Name):
+                    aliases[stmt.targets[0].id] = inner.id
+        return {"defs": defs, "classes": classes, "aliases": aliases}
+
+    # -- resolution --------------------------------------------------------
+
+    def _local_def(self, path: str, name: str):
+        idx = self._defs.get(path)
+        if idx is None:
+            return None
+        name = idx["aliases"].get(name, name)
+        return idx["defs"].get(name)
+
+    def resolve_dotted(self, path: str, name: str) -> list:
+        """Candidate ``(def_path, FunctionDef)`` for a dotted callee name."""
+        parts = name.split(".")
+        if len(parts) == 1:
+            fn = self._local_def(path, name)
+            if fn is not None:
+                return [(path, fn)]
+            imp = self.imports.get(path, {}).get(name)
+            if imp is not None:
+                module, symbol = imp
+                if symbol is not None:
+                    return self._module_symbol(module, symbol)
+            return []
+        # alias.attr / module.sub.attr / full dotted path
+        imp = self.imports.get(path, {}).get(parts[0])
+        if imp is not None and imp[1] is None:
+            return self._module_symbol(imp[0], ".".join(parts[1:]))
+        if imp is not None and imp[1] is not None and len(parts) == 2:
+            # `from pkg import mod`-style binding where pkg.mod is not a
+            # file: parts[0] is a symbol, attribute access unresolvable
+            return []
+        # plain `import repro.a.b` usage: longest module prefix wins
+        for cut in range(len(parts) - 1, 0, -1):
+            module = ".".join(parts[:cut])
+            if module in self.module_to_path:
+                return self._module_symbol(module, ".".join(parts[cut:]))
+        return []
+
+    def _module_symbol(self, module: str, symbol: str) -> list:
+        """Resolve ``symbol`` (possibly dotted through submodules) in
+        ``module`` to FunctionDef candidates."""
+        parts = symbol.split(".")
+        # descend through real submodules first: repro.train + step.make
+        while len(parts) > 1 and f"{module}.{parts[0]}" in self.module_to_path:
+            module = f"{module}.{parts[0]}"
+            parts = parts[1:]
+        if len(parts) != 1:
+            return []
+        tpath = self.module_to_path.get(module)
+        if tpath is None:
+            return []
+        fn = self._local_def(tpath, parts[0])
+        return [(tpath, fn)] if fn is not None else []
+
+    def resolve_call(self, path: str, call: ast.Call) -> list:
+        """Candidate ``(def_path, FunctionDef)`` for a call expression."""
+        func = call.func
+        # unwrap jit(f)(...) / partial(f, ...)(...) chains one level
+        if isinstance(func, ast.Call) and func.args and \
+                (is_jit_expr(func.func) or is_partial_expr(func.func)):
+            func = func.args[0]
+        d = dotted(func)
+        if d is None:
+            return []
+        parts = d.split(".")
+        if parts[0] == "self" and len(parts) == 2:
+            return self._resolve_self(path, call, parts[1])
+        return self.resolve_dotted(path, d)
+
+    def _resolve_self(self, path: str, node: ast.AST, meth: str) -> list:
+        ctx = self.files.get(path)
+        if ctx is None:
+            return []
+        cur = ctx.parents.get(node)
+        while cur is not None and not isinstance(cur, ast.ClassDef):
+            cur = ctx.parents.get(cur)
+        if cur is None:
+            return []
+        fn = self._defs[path]["classes"].get(cur.name, {}).get(meth)
+        return [(path, fn)] if fn is not None else []
+
+    # -- reachability ------------------------------------------------------
+
+    def reachable(self, path: str, fn) -> list:
+        """``(path, FunctionDef)`` reachable from ``fn`` via resolved calls
+        and nested defs (both included), ``fn`` itself first."""
+        seen_ids: set = set()
+        out: list = []
+        stack = [(path, fn)]
+        while stack and len(out) < MAX_REACH:
+            p, f = stack.pop()
+            if id(f) in seen_ids:
+                continue
+            seen_ids.add(id(f))
+            out.append((p, f))
+            for node in ast.walk(f):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and node is not f:
+                    stack.append((p, node))
+                elif isinstance(node, ast.Call):
+                    stack.extend(self.resolve_call(p, node))
+        return out
+
+    # -- cross-module maps for the project passes --------------------------
+
+    def int_env(self, path: str) -> dict[str, int]:
+        """Module-level int constants visible in ``path`` through imports:
+        both ``NAME`` (from-imports) and ``alias.NAME`` (module bindings)."""
+        env: dict[str, int] = {}
+        for local, (module, symbol) in self.imports.get(path, {}).items():
+            tpath = self.module_to_path.get(module)
+            if tpath is None or tpath not in self.files:
+                continue
+            consts = self.files[tpath].int_constants
+            if symbol is not None:
+                if symbol in consts:
+                    env[local] = consts[symbol]
+            else:
+                for name, val in consts.items():
+                    env[f"{local}.{name}"] = val
+        return env
+
+    def imported_donors(self, path: str) -> dict[str, list[int]]:
+        """Callee spellings in ``path`` that resolve to a donating jit
+        defined in another module: ``{"train_step": [0], "ts.step": [0]}``."""
+        from repro.tools.jaxlint.rules.donate import module_donors
+        out: dict[str, list[int]] = {}
+        for local, (module, symbol) in self.imports.get(path, {}).items():
+            tpath = self.module_to_path.get(module)
+            if tpath is None or tpath not in self.files or tpath == path:
+                continue
+            donors = module_donors(self.files[tpath].tree)
+            if symbol is not None:
+                if symbol in donors:
+                    out[local] = donors[symbol]
+            else:
+                for name, pos in donors.items():
+                    out[f"{local}.{name}"] = pos
+        return out
+
+    def deps(self, path: str) -> set:
+        """Project files this file's analysis may read (direct imports,
+        package bindings expanded) — the cache-invalidation edge set."""
+        if path in self._deps_cache:
+            return self._deps_cache[path]
+        out: set = set()
+        for module, _symbol in self.imports.get(path, {}).values():
+            out |= self._expand_module(module)
+        for module in self._plain.get(path, ()):
+            out |= self._expand_module(module)
+        out.discard(path)
+        self._deps_cache[path] = out
+        return out
+
+    def _expand_module(self, module: str) -> set:
+        paths: set = set()
+        tpath = self.module_to_path.get(module)
+        if tpath is not None:
+            paths.add(tpath)
+            if tpath.endswith("__init__.py"):
+                prefix = module + "."
+                paths |= {p for m, p in self.module_to_path.items()
+                          if m.startswith(prefix)}
+        return paths
+
+    def import_closure(self, path: str) -> set:
+        """Transitive ``deps`` closure (excluding ``path`` itself)."""
+        seen: set = set()
+        stack = [path]
+        while stack:
+            for dep in self.deps(stack.pop()):
+                if dep not in seen:
+                    seen.add(dep)
+                    stack.append(dep)
+        seen.discard(path)
+        return seen

@@ -1,4 +1,5 @@
 """Rule modules self-register on import (see ``core.register``)."""
 
-from repro.tools.jaxlint.rules import (donate, hostsync, pallastile,  # noqa: F401
+from repro.tools.jaxlint.rules import (donate, hostsync, keyreuse,  # noqa: F401
+                                       pallastile, recompile, scancarry,
                                        shard, tracerbranch)

@@ -16,8 +16,17 @@ Mechanics, per function scope: find local bindings
 which *named* variables are passed in donated positions at each call of
 ``f``, then flag any later read of those names that is not preceded by a
 rebinding (``state = f(state)`` rebinding on the call line is the blessed
-idiom).  Line-ordered and scope-local by design: cross-module donation
-(a donating callable received as an argument) is invisible — keep such
+idiom).
+
+The per-file check only sees donors defined in the same module.  The
+*project pass* closes the cross-module half: it collects every donating
+jit defined anywhere in the project (``module_donors``), maps them
+through each file's imports (``from repro.train.step import train_step``
+and ``import repro.train.step as ts`` spellings both resolve), and
+re-runs the same line-ordered scan seeded with those imported donors —
+reads of state donated to an *imported* step now fire in the caller's
+file, which is exactly where the rebinding belongs.  A donating callable
+received as a bare function argument remains invisible — keep such
 contracts documented at the callee.
 """
 
@@ -27,7 +36,7 @@ import ast
 
 from repro.tools.jaxlint.astutil import (dotted, is_jit_expr, kw,
                                          literal_ints, unwrap_partial)
-from repro.tools.jaxlint.core import register
+from repro.tools.jaxlint.core import register, register_project
 
 
 def _donating_binding(node: ast.Assign) -> tuple[str, list[int]] | None:
@@ -56,8 +65,26 @@ def _donating_def(fn) -> list[int]:
     return []
 
 
-def _scan_scope(ctx, body, qual: str):
-    donors: dict[str, list[int]] = {}
+def module_donors(tree) -> dict[str, list[int]]:
+    """Public donating callables of a module: name -> donate positions
+    (``@partial(jax.jit, donate_argnums=...)`` defs and module-level
+    ``f = jax.jit(g, donate_argnums=...)`` bindings)."""
+    out: dict[str, list[int]] = {}
+    for stmt in tree.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            d = _donating_def(stmt)
+            if d:
+                out[stmt.name] = d
+        elif isinstance(stmt, ast.Assign):
+            b = _donating_binding(stmt)
+            if b is not None:
+                out[b[0]] = b[1]
+    return out
+
+
+def _scan_scope(ctx, body, qual: str, extra_donors=None,
+                collect_local: bool = True):
+    donors: dict[str, list[int]] = dict(extra_donors or {})
     stores: dict[str, list[int]] = {}    # name -> store linenos
     loads: dict[str, list] = {}          # name -> Name load nodes
     donated: list[tuple[str, int, str]] = []  # (var, call line, callee)
@@ -65,11 +92,12 @@ def _scan_scope(ctx, body, qual: str):
     def walk(stmts):
         for st in stmts:
             if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                d = _donating_def(st)
-                if d:
-                    donors[st.name] = d
+                if collect_local:
+                    d = _donating_def(st)
+                    if d:
+                        donors[st.name] = d
                 continue  # nested scopes are scanned separately
-            if isinstance(st, ast.Assign):
+            if isinstance(st, ast.Assign) and collect_local:
                 b = _donating_binding(st)
                 if b is not None:
                     donors[b[0]] = b[1]
@@ -116,3 +144,23 @@ def check(ctx):
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
             yield from _scan_scope(ctx, node.body,
                                    ctx.qualnames.get(node, node.name))
+
+
+@register_project("DONATE")
+def project_check(project, targets):
+    """Cross-module half: rerun the scan seeded with *imported* donors only
+    (local collection off — the per-file check already covered those)."""
+    for path in targets:
+        ctx = project.files.get(path)
+        if ctx is None:
+            continue
+        extra = project.imported_donors(path)
+        if not extra:
+            continue
+        yield from _scan_scope(ctx, ctx.tree.body, "", extra_donors=extra,
+                               collect_local=False)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from _scan_scope(
+                    ctx, node.body, ctx.qualnames.get(node, node.name),
+                    extra_donors=extra, collect_local=False)

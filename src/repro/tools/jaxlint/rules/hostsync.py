@@ -12,13 +12,24 @@ The rule fires only in the hot-loop modules (``config.hot_loop_modules``)
 and skips the sanctioned sync points (``config.sync_allowlist``, matched
 by function qualname).  ``float(<literal>)`` is ignored — ``float("-inf")``
 is not a device fetch.
+
+The *project pass* adds the outsourced-sync case: a hot-loop module
+calling a helper in another module whose body (or a helper of that
+helper — two hops) performs a sync stalls the loop just the same.  The
+finding lands at the hot-loop *call site* (the attribution the cache
+relies on) with the helper's sync location in the message.  Callees that
+are themselves hot-loop modules are skipped — their own per-file run
+covers them.
 """
 
 from __future__ import annotations
 
 import ast
 
-from repro.tools.jaxlint.core import register
+from repro.tools.jaxlint.core import register, register_project
+
+#: hops the project pass follows from a hot-loop call site into helpers
+_HELPER_DEPTH = 2
 
 
 def _sync_pattern(call: ast.Call) -> str | None:
@@ -63,3 +74,80 @@ def check(ctx):
             node, "HOSTSYNC",
             f"host sync `{pat}` {where} — hot-loop modules stay async "
             f"outside the sanctioned sync points (see sync_allowlist)")
+
+
+def _hot_module_of(ctx, config) -> str | None:
+    return next((m for m in config.hot_loop_modules
+                 if ctx.module_path == m
+                 or ctx.module_path.endswith("/" + m)), None)
+
+
+def _first_sync(project, path: str, fn, depth: int, seen: set,
+                hot_paths: set):
+    """(path, line, pattern, qualname) of the first host sync reachable
+    inside ``fn`` within ``_HELPER_DEPTH`` hops, else None."""
+    if id(fn) in seen:
+        return None
+    seen.add(id(fn))
+    ctx = project.files[path]
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            pat = _sync_pattern(node)
+            if pat is not None:
+                return (path, node.lineno, pat,
+                        ctx.qualnames.get(fn, fn.name))
+    if depth >= _HELPER_DEPTH:
+        return None
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        for cpath, cfn in project.resolve_call(path, node):
+            if cpath in hot_paths:
+                continue
+            found = _first_sync(project, cpath, cfn, depth + 1, seen,
+                                hot_paths)
+            if found is not None:
+                return found
+    return None
+
+
+@register_project("HOSTSYNC")
+def project_check(project, targets):
+    cfg = project.config
+    hot_paths = {p for p, c in project.files.items()
+                 if _hot_module_of(c, cfg) is not None}
+    for path in targets:
+        ctx = project.files.get(path)
+        if ctx is None:
+            continue
+        module = _hot_module_of(ctx, cfg)
+        if module is None:
+            continue
+        allowed = cfg.sync_allowlist.get(module, ())
+        reported: set = set()
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            qual = ctx.qualname_of(node)
+            if any(qual == a or qual.startswith(a + ".") for a in allowed):
+                continue
+            for cpath, cfn in project.resolve_call(path, node):
+                if cpath in hot_paths:
+                    continue  # covered by that file's own per-file run
+                sync = _first_sync(project, cpath, cfn, 1, set(),
+                                   hot_paths)
+                if sync is None:
+                    continue
+                spath, sline, pat, squal = sync
+                key = (node.lineno, spath, sline)
+                if key in reported:
+                    continue
+                reported.add(key)
+                where = f"in `{qual}`" if qual else "at module level"
+                yield ctx.finding(
+                    node, "HOSTSYNC",
+                    f"call {where} reaches host sync `{pat}` in "
+                    f"`{squal}` ({spath}:{sline}) — the helper stalls "
+                    f"the hot loop exactly like an inline sync; hoist "
+                    f"it behind a sanctioned sync point or pragma the "
+                    f"call")

@@ -1,0 +1,263 @@
+"""KEYREUSE: a PRNG key consumed twice without an intervening split/fold_in.
+
+jax's threefry keys are *consumed*, not advanced: two calls of
+``jax.random.normal(key, ...)`` with the same key return the same bits,
+and two ``split(key)`` calls return the same children.  In this repo the
+stakes are concrete — the chunked-training batch synthesis and the EPG
+dictionary generation both derive per-step keys from one root; a silent
+reuse correlates batches (or dictionary noise draws) and quietly degrades
+training without any error.  The blessed idioms are ``k1, k2 =
+jax.random.split(key)`` and ``batch_key = jax.random.fold_in(key, step)``.
+
+The rule is line-ordered per scope: a *consumption* is a key variable
+passed (first positional or ``key=`` keyword) to a ``jax.random``
+sampler or to ``split``; ``fold_in`` is a *derivation* (same parent with
+different data is exactly its point) and does not count.  Two
+consumptions of one binding without an intervening rebinding of that name
+fire, as does a single consumption inside a ``for``/``while`` body (or a
+comprehension) when the key is bound outside the loop and never rebound
+per iteration — every pass draws with the same key.  Recognition covers
+``jax.random.X`` / ``from jax import random`` / ``import jax.random as
+jr`` / ``from jax.random import X`` spellings; numpy's stateful
+``np.random`` is explicitly excluded (reuse is not a hazard there).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.tools.jaxlint.astutil import dotted
+from repro.tools.jaxlint.core import register
+
+#: jax.random sampling primitives that consume their key
+SAMPLERS = frozenset({
+    "ball", "bernoulli", "beta", "binomial", "bits", "categorical",
+    "cauchy", "chisquare", "choice", "dirichlet", "double_sided_maxwell",
+    "exponential", "gamma", "geometric", "gumbel", "laplace", "loggamma",
+    "logistic", "maxwell", "multivariate_normal", "normal", "orthogonal",
+    "pareto", "permutation", "poisson", "rademacher", "randint", "rayleigh",
+    "shuffle", "t", "truncated_normal", "uniform", "wald", "weibull_min",
+})
+
+#: consuming callees (split consumes too: two splits of one key collide)
+CONSUMERS = SAMPLERS | {"split"}
+
+_NUMPY_BASES = frozenset({"np", "numpy", "onp", "jnp"})
+
+
+def _random_env(tree) -> tuple[dict[str, str], set]:
+    """(bare names bound to jax.random functions, jax.random module
+    aliases)."""
+    fn_names: dict[str, str] = {}
+    aliases: set = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax.random" and a.asname:
+                    aliases.add(a.asname)
+        elif isinstance(node, ast.ImportFrom) and node.level == 0:
+            if node.module == "jax":
+                for a in node.names:
+                    if a.name == "random":
+                        aliases.add(a.asname or "random")
+            elif node.module == "jax.random":
+                for a in node.names:
+                    if a.name in CONSUMERS:
+                        fn_names[a.asname or a.name] = a.name
+    return fn_names, aliases
+
+
+def _consumer_of(call: ast.Call, fn_names, aliases) -> str | None:
+    """Canonical jax.random consumer name for this call, else None."""
+    d = dotted(call.func)
+    if d is None:
+        return None
+    parts = d.split(".")
+    if len(parts) == 1:
+        return fn_names.get(d)
+    if parts[-1] not in CONSUMERS:
+        return None
+    if parts[0] in _NUMPY_BASES:
+        return None
+    if parts[-2] in aliases:
+        return parts[-1]
+    if len(parts) >= 3 and parts[-2] == "random" and parts[-3] == "jax":
+        return parts[-1]
+    return None
+
+
+def _key_arg(call: ast.Call) -> str | None:
+    """Name of the key variable this consumer call consumes, if a Name."""
+    if call.args and isinstance(call.args[0], ast.Name):
+        return call.args[0].id
+    for k in call.keywords:
+        if k.arg == "key" and isinstance(k.value, ast.Name):
+            return k.value.id
+    return None
+
+
+def _stored_names(node) -> set:
+    """All names stored anywhere under ``node`` (incl. loop targets)."""
+    out: set = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Store):
+            out.add(sub.id)
+    return out
+
+
+class _Scope:
+    """Line-ordered key-consumption scan of one function (or module) body;
+    nested defs are separate scopes."""
+
+    def __init__(self, ctx, fn_names, aliases, qual: str):
+        self.ctx = ctx
+        self.fn_names = fn_names
+        self.aliases = aliases
+        self.qual = qual
+        self.last_use: dict[str, tuple] = {}   # name -> (line, fn)
+        self.loop_stored: list[set] = []       # stack of in-loop stores
+        self.flagged: set = set()              # (name, line) dedup
+        self.findings: list = []
+
+    def _consume(self, call: ast.Call) -> None:
+        fn = _consumer_of(call, self.fn_names, self.aliases)
+        if fn is None:
+            return
+        name = _key_arg(call)
+        if name is None:
+            return
+        in_loop_unbound = any(name not in stored
+                              for stored in self.loop_stored) \
+            and bool(self.loop_stored)
+        prev = self.last_use.get(name)
+        where = f" in `{self.qual}`" if self.qual else ""
+        if prev is not None and (name, call.lineno) not in self.flagged:
+            self.flagged.add((name, call.lineno))
+            self.findings.append(self.ctx.finding(
+                call, "KEYREUSE",
+                f"key `{name}` consumed by `{fn}` was already consumed by "
+                f"`{prev[1]}` at line {prev[0]}{where} — same key, same "
+                f"bits; split or fold_in between uses"))
+        elif in_loop_unbound and (name, call.lineno) not in self.flagged:
+            self.flagged.add((name, call.lineno))
+            self.findings.append(self.ctx.finding(
+                call, "KEYREUSE",
+                f"key `{name}` consumed by `{fn}` inside a loop without a "
+                f"per-iteration rebinding{where} — every iteration draws "
+                f"with the same key; derive with fold_in(key, i) or split "
+                f"outside the loop"))
+        self.last_use[name] = (call.lineno, fn)
+
+    def _store(self, name: str) -> None:
+        self.last_use.pop(name, None)
+
+    # -- expression walk (consumptions + comprehension loops) --------------
+
+    def expr(self, node) -> None:
+        if node is None or isinstance(node, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef,
+                                             ast.Lambda)):
+            return  # nested callables are their own scope
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                             ast.GeneratorExp)):
+            stored = set()
+            for gen in node.generators:
+                stored |= _stored_names(gen.target)
+                self.expr(gen.iter)
+            self.loop_stored.append(stored)
+            for gen in node.generators:
+                for cond in gen.ifs:
+                    self.expr(cond)
+            if isinstance(node, ast.DictComp):
+                self.expr(node.key)
+                self.expr(node.value)
+            else:
+                self.expr(node.elt)
+            self.loop_stored.pop()
+            return
+        if isinstance(node, ast.Call):
+            self._consume(node)
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self.expr(child)
+
+    # -- statement walk ----------------------------------------------------
+
+    def run(self, stmts) -> None:
+        for st in stmts:
+            self.stmt(st)
+
+    def stmt(self, st) -> None:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+            return  # separate scope
+        if isinstance(st, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            if st.value is not None:
+                self.expr(st.value)
+            targets = st.targets if isinstance(st, ast.Assign) else [st.target]
+            for tgt in targets:
+                for name in _stored_names(tgt):
+                    self._store(name)
+            return
+        if isinstance(st, ast.If):
+            # exclusive branches are not sequential reuse: scan each from
+            # the same pre-state, keep only consumptions both agree on
+            self.expr(st.test)
+            snap = dict(self.last_use)
+            self.run(st.body)
+            after_body = self.last_use
+            self.last_use = dict(snap)
+            self.run(st.orelse)
+            self.last_use = {n: u for n, u in after_body.items()
+                             if n in self.last_use}
+            return
+        if isinstance(st, ast.Try):
+            snap = dict(self.last_use)
+            self.run(st.body)
+            after_body = self.last_use
+            for handler in st.handlers:
+                self.last_use = dict(snap)
+                self.run(handler.body)
+            self.last_use = {n: u for n, u in after_body.items()
+                             if n in self.last_use}
+            self.run(st.orelse)
+            self.run(st.finalbody)
+            return
+        if isinstance(st, (ast.For, ast.AsyncFor, ast.While)):
+            if isinstance(st, ast.While):
+                self.expr(st.test)
+                stored = _stored_names(st)
+            else:
+                self.expr(st.iter)
+                stored = _stored_names(st) | _stored_names(st.target)
+            self.loop_stored.append(stored)
+            self.run(st.body)
+            self.loop_stored.pop()
+            self.run(st.orelse)
+            return
+        # generic: sub-statements in order, expressions as encountered
+        for _field, value in ast.iter_fields(st):
+            if isinstance(value, list):
+                for v in value:
+                    if isinstance(v, ast.stmt):
+                        self.stmt(v)
+                    elif isinstance(v, ast.expr):
+                        self.expr(v)
+            elif isinstance(value, ast.stmt):
+                self.stmt(value)
+            elif isinstance(value, ast.expr):
+                self.expr(value)
+
+
+@register("KEYREUSE", "jax.random key consumed twice (or every loop "
+                      "iteration) without an intervening split/fold_in")
+def check(ctx):
+    fn_names, aliases = _random_env(ctx.tree)
+    scopes = [(ctx.tree.body, "")]
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scopes.append((node.body, ctx.qualnames.get(node, node.name)))
+    for body, qual in scopes:
+        scan = _Scope(ctx, fn_names, aliases, qual)
+        scan.run(body)
+        yield from scan.findings

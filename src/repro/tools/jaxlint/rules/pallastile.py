@@ -12,11 +12,15 @@ footprint (sum over block + scratch shapes x dtype), erroring above
 
 Resolution is static-only: a dim resolves when it is an int literal, a
 module-level int constant (``PAD = 128``), or the enclosing function
-parameter's int default (``block_m: int = 128``).  Unresolvable dims are
-skipped for alignment and contribute nothing to the (thus lower-bound)
-VMEM estimate.  Intentionally-narrow blocks — a ``(1, N)`` bias row, a
-``(Bq, 1)`` online-softmax column — are real and fine: they earn a
-``# jaxlint: disable=PALLASTILE -- why`` on the line.
+parameter's int default (``block_m: int = 128``).  The *project pass*
+widens the constant environment to imported module-level ints — ``from
+repro.kernels.tiles import BLOCK_N`` and ``tiles.BLOCK_N`` spellings both
+resolve — and reports only the findings the per-file environment could
+not prove.  Unresolvable dims are skipped for alignment and contribute
+nothing to the (thus lower-bound) VMEM estimate.  Intentionally-narrow
+blocks — a ``(1, N)`` bias row, a ``(Bq, 1)`` online-softmax column — are
+real and fine: they earn a ``# jaxlint: disable=PALLASTILE -- why`` on
+the line.
 """
 
 from __future__ import annotations
@@ -24,7 +28,7 @@ from __future__ import annotations
 import ast
 
 from repro.tools.jaxlint.astutil import dotted, int_defaults, kw
-from repro.tools.jaxlint.core import DTYPE_BYTES, register
+from repro.tools.jaxlint.core import DTYPE_BYTES, register, register_project
 
 
 def _is_blockspec(call: ast.Call) -> bool:
@@ -49,6 +53,11 @@ def _resolve(elt, env: dict[str, int]) -> int | None:
         return elt.value
     if isinstance(elt, ast.Name):
         return env.get(elt.id)
+    if isinstance(elt, ast.Attribute):
+        # dotted constants: `tiles.BLOCK_N` (project int_env keys)
+        d = dotted(elt)
+        if d is not None:
+            return env.get(d)
     return None
 
 
@@ -61,8 +70,9 @@ def _dtype_bytes(call: ast.Call, default: int) -> int:
     return default
 
 
-def _env_for(ctx, node) -> dict[str, int]:
-    env = dict(ctx.int_constants)
+def _env_for(ctx, node, extra: dict | None = None) -> dict[str, int]:
+    env = dict(extra) if extra else {}
+    env.update(ctx.int_constants)
     fn = ctx.enclosing_function(node)
     while fn is not None:
         for name, val in int_defaults(fn).items():
@@ -121,21 +131,21 @@ def _iter_spec_calls(node):
                 yield sub
 
 
-@register("PALLASTILE", "Pallas block shape off the (8, 128) TPU tile grid "
-                        "or pallas_call over the VMEM budget")
-def check(ctx):
+def _kernel_file(ctx) -> bool:
     cfg = ctx.config
-    path = ctx.module_path
-    if not (path.startswith(cfg.kernel_path_prefix)
-            and path.endswith(cfg.kernel_file_suffix)):
-        return
+    return (ctx.module_path.startswith(cfg.kernel_path_prefix)
+            and ctx.module_path.endswith(cfg.kernel_file_suffix))
+
+
+def _check_env(ctx, extra: dict | None):
+    cfg = ctx.config
     seen: set = set()
     for node in ast.walk(ctx.tree):
         if not isinstance(node, ast.Call):
             continue
         d = dotted(node.func)
         if d is not None and d.split(".")[-1] == "pallas_call":
-            env = _env_for(ctx, node)
+            env = _env_for(ctx, node, extra)
             vmem = 0
             for spec in _iter_spec_calls(node):
                 seen.add(spec)
@@ -152,4 +162,30 @@ def check(ctx):
     for node in ast.walk(ctx.tree):
         if isinstance(node, ast.Call) and node not in seen \
                 and (_is_blockspec(node) or _is_vmem(node)):
-            yield from _alignment_findings(ctx, node, _env_for(ctx, node))
+            yield from _alignment_findings(ctx, node,
+                                           _env_for(ctx, node, extra))
+
+
+@register("PALLASTILE", "Pallas block shape off the (8, 128) TPU tile grid "
+                        "or pallas_call over the VMEM budget")
+def check(ctx):
+    if not _kernel_file(ctx):
+        return
+    yield from _check_env(ctx, None)
+
+
+@register_project("PALLASTILE")
+def project_check(project, targets):
+    """Rerun with imported module-level int constants in the environment;
+    yield only what the per-file environment could not prove."""
+    for path in targets:
+        ctx = project.files.get(path)
+        if ctx is None or not _kernel_file(ctx):
+            continue
+        extra = project.int_env(path)
+        if not extra:
+            continue
+        base = {f.key for f in _check_env(ctx, None)}
+        for f in _check_env(ctx, extra):
+            if f.key not in base:
+                yield f

@@ -1,0 +1,179 @@
+"""RECOMPILE: jit re-trace hazards — the cost the bucket system exists to kill.
+
+``jax.jit``'s compilation cache is keyed on the *function object* plus the
+static argument values.  Three patterns silently defeat it:
+
+* **jit inside a loop** — ``jit(f)`` (or ``partial(jit, ...)``, or an
+  ``@jit``-decorated def) evaluated in a ``for``/``while`` body creates a
+  fresh traced callable every iteration: trace + lower + compile per step,
+  exactly the dispatch overhead the serve bucket system and the chunked
+  trainer were built to amortize away.
+* **immediately-invoked jit** — ``jit(fn)(x)`` inside a function body
+  builds a new wrapper per call; the cache behind it never gets a second
+  hit through the same object.  Bind once (module level or a factory) and
+  call the binding.
+* **loop variable in a static position** — calling a jit with
+  ``static_argnums``/``static_argnames`` and feeding the loop variable
+  into a static slot retraces once per distinct value: the per-call
+  Python scalar the serve path instead rounds into a fixed bucket set.
+
+Factories that build a jit once and return it (``make_*``) are the
+blessed idiom and do not fire — only jit *evaluation* under a loop, the
+immediate-invoke shape, and static-slot loop feeds do.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.tools.jaxlint.astutil import (is_jit_expr, kw, literal_ints,
+                                         literal_strings, positional_params,
+                                         unwrap_partial)
+from repro.tools.jaxlint.core import register
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    """``jit(...)`` / ``jax.jit(...)`` / ``partial(jax.jit, ...)``."""
+    if is_jit_expr(call.func):
+        return True
+    inner, _ = unwrap_partial(call)
+    return inner is not None and is_jit_expr(inner)
+
+
+def _jit_decorator(fn) -> ast.AST | None:
+    for dec in fn.decorator_list:
+        if is_jit_expr(dec):
+            return dec
+        if isinstance(dec, ast.Call):
+            inner, _ = unwrap_partial(dec)
+            if (inner is not None and is_jit_expr(inner)) \
+                    or is_jit_expr(dec.func):
+                return dec
+    return None
+
+
+def _static_positions(keywords, fn=None) -> tuple[list[int], list[str]]:
+    nums = literal_ints(kw(keywords, "static_argnums"))
+    names = literal_strings(kw(keywords, "static_argnames"))
+    if fn is not None and nums:
+        pos = positional_params(fn)
+        names = names + [pos[i] for i in nums if 0 <= i < len(pos)]
+    return nums, names
+
+
+def _static_bindings(tree) -> dict[str, tuple[list[int], list[str]]]:
+    """Callable name -> (static argnums, static argnames) for jits with
+    static arguments: ``f = jax.jit(g, static_argnums=...)`` bindings and
+    ``@partial(jax.jit, static_argnames=...)`` decorated defs."""
+    out: dict[str, tuple[list[int], list[str]]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Call) \
+                and is_jit_expr(node.value.func):
+            nums, names = _static_positions(node.value.keywords)
+            if nums or names:
+                out[node.targets[0].id] = (nums, names)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            dec = _jit_decorator(node)
+            if isinstance(dec, ast.Call):
+                _inner, kws = unwrap_partial(dec)
+                kws = kws or dec.keywords
+                nums, names = _static_positions(kws, node)
+                if nums or names:
+                    out[node.name] = (nums, names)
+    return out
+
+
+class _Scan:
+    def __init__(self, ctx):
+        self.ctx = ctx
+        self.statics = _static_bindings(ctx.tree)
+        self.findings: list = []
+
+    def _where(self, node) -> str:
+        qual = self.ctx.qualname_of(node)
+        return f" in `{qual}`" if qual else ""
+
+    def visit(self, node, loops: tuple) -> None:
+        """``loops`` is the stack of active For-target name sets (a While
+        contributes an empty set — it marks loop depth, not targets)."""
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            dec = _jit_decorator(node)
+            if dec is not None and loops:
+                self.findings.append(self.ctx.finding(
+                    node, "RECOMPILE",
+                    f"`@jit`-decorated `{node.name}` defined inside a loop"
+                    f"{self._where(node)} — a fresh traced callable every "
+                    f"iteration; hoist the definition out of the loop"))
+            # a def body is a new deferred scope: loop stack does not
+            # carry in (the body runs when called, not per iteration)
+            for child in ast.iter_child_nodes(node):
+                self.visit(child, ())
+            return
+        if isinstance(node, (ast.For, ast.AsyncFor, ast.While)):
+            targets = set()
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                for sub in ast.walk(node.target):
+                    if isinstance(sub, ast.Name):
+                        targets.add(sub.id)
+                self.visit(node.iter, loops)
+            else:
+                self.visit(node.test, loops)
+            inner = loops + (targets,)
+            for st in node.body:
+                self.visit(st, inner)
+            for st in node.orelse:
+                self.visit(st, loops)
+            return
+        if isinstance(node, ast.Call):
+            self._check_call(node, loops)
+        for child in ast.iter_child_nodes(node):
+            self.visit(child, loops)
+
+    def _check_call(self, call: ast.Call, loops: tuple) -> None:
+        if _is_jit_call(call) and loops:
+            self.findings.append(self.ctx.finding(
+                call, "RECOMPILE",
+                f"jit evaluated inside a loop{self._where(call)} — "
+                f"trace + compile every iteration; bind the jitted "
+                f"callable once outside the loop"))
+        # immediately-invoked: jit(f)(x) — the outer call's func is a jit
+        if isinstance(call.func, ast.Call) and _is_jit_call(call.func) \
+                and not loops and self.ctx.enclosing_function(call) is not None:
+            self.findings.append(self.ctx.finding(
+                call, "RECOMPILE",
+                f"immediately-invoked jit{self._where(call)} — a fresh "
+                f"wrapper (and trace) per call; bind `jit(...)` once and "
+                f"reuse it"))
+        # loop variable feeding a static position of a known jit
+        if loops and isinstance(call.func, ast.Name) \
+                and call.func.id in self.statics:
+            nums, names = self.statics[call.func.id]
+            active = set().union(*loops) if loops else set()
+            hits = []
+            for i in nums:
+                if i < len(call.args) and isinstance(call.args[i], ast.Name) \
+                        and call.args[i].id in active:
+                    hits.append(call.args[i].id)
+            for k in call.keywords:
+                if k.arg in names and isinstance(k.value, ast.Name) \
+                        and k.value.id in active:
+                    hits.append(k.value.id)
+            if hits:
+                self.findings.append(self.ctx.finding(
+                    call, "RECOMPILE",
+                    f"loop variable `{hits[0]}` feeds a static argument of "
+                    f"jitted `{call.func.id}`{self._where(call)} — one "
+                    f"retrace per distinct value; make it traced, or bucket "
+                    f"it the way the serve executor pads to fixed shapes"))
+
+
+@register("RECOMPILE", "jit re-trace hazard: jit built inside a loop, "
+                       "immediately-invoked jit, or a loop variable in a "
+                       "static argument position")
+def check(ctx):
+    scan = _Scan(ctx)
+    for st in ctx.tree.body:
+        scan.visit(st, ())
+    yield from scan.findings

@@ -1,0 +1,249 @@
+"""SCANCARRY: a scan/while/fori body whose carry-out shape can't match in.
+
+``lax.scan``/``lax.while_loop``/``lax.fori_loop`` require the carry
+pytree structure to be identical between input and output — a body that
+returns a different tuple arity or different dict keys fails at trace
+time with an unhelpful tree-structure error, and *only on the code path
+that actually traces it* (a chunked-dispatch run, not the stepwise unit
+test).  This is the failure mode of every ``TrainState`` extension so
+far: add an ``aux`` slot to the carry tuple, forget to thread it through
+the scan body's return, and the error surfaces two layers away in the
+engine.
+
+The rule statically compares every carry structure it can prove:
+
+* the ``init`` argument when it is a tuple/list/dict literal (or a local
+  name bound to one),
+* the body's unpacking of its carry parameter (``a, b = carry``),
+* each ``return`` — for scan, the first element of the returned pair;
+  for while/fori, the returned expression — again resolving one level of
+  local name bindings.
+
+Any two provable structures that disagree (kind, tuple arity, dict key
+set) fire.  Unknown structures stay silent: the rule errs toward missing
+a mismatch over flagging a correct body.  Bodies reached through
+``functools.partial(f, bound, ...)`` shift the carry parameter index past
+the bound arguments.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.tools.jaxlint.astutil import dotted, kw, positional_params
+from repro.tools.jaxlint.core import register
+
+#: loop combinator -> (body arg index, body kw, init arg index, init kw,
+#:                     carry param index within the body)
+COMBINATORS = {
+    "scan": (0, "f", 1, "init", 0),
+    "while_loop": (1, "body_fun", 2, "init_val", 0),
+    "fori_loop": (2, "body_fun", 3, "init_val", 1),
+}
+
+
+def _combinator_of(call: ast.Call, lax_imports) -> str | None:
+    d = dotted(call.func)
+    if d is None:
+        return None
+    parts = d.split(".")
+    if len(parts) == 1:
+        return lax_imports.get(d)
+    if parts[-1] in COMBINATORS and parts[-2] == "lax":
+        return parts[-1]
+    return None
+
+
+def _lax_imports(tree) -> dict[str, str]:
+    """Bare names bound to lax loop combinators (``from jax.lax import
+    scan``)."""
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.level == 0 \
+                and node.module in ("jax.lax", "lax"):
+            for a in node.names:
+                if a.name in COMBINATORS:
+                    out[a.asname or a.name] = a.name
+    return out
+
+
+# -- provable carry structures ---------------------------------------------
+
+def _struct_of(node, env: dict) -> tuple | None:
+    """("tuple", arity) | ("dict", frozenset keys) | None (unknown)."""
+    if isinstance(node, (ast.Tuple, ast.List)):
+        if any(isinstance(e, ast.Starred) for e in node.elts):
+            return None
+        return ("tuple", len(node.elts))
+    if isinstance(node, ast.Dict):
+        if any(k is None for k in node.keys):
+            return None
+        keys = []
+        for k in node.keys:
+            if not (isinstance(k, ast.Constant) and isinstance(k.value, str)):
+                return None
+            keys.append(k.value)
+        return ("dict", frozenset(keys))
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    return None
+
+
+def _local_structs(stmts) -> dict:
+    """name -> provable structure from simple assignments in a body
+    (last assignment wins; best-effort straight-line view)."""
+    env: dict = {}
+    for node in ast.walk(ast.Module(body=list(stmts), type_ignores=[])):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            s = _struct_of(node.value, env)
+            if s is not None:
+                env[node.targets[0].id] = s
+    return env
+
+
+def _describe(struct) -> str:
+    kind, detail = struct
+    if kind == "tuple":
+        return f"a {detail}-tuple"
+    return f"a dict with keys {{{', '.join(sorted(detail))}}}"
+
+
+def _resolve_body(call: ast.Call, combo: str, by_name: dict):
+    """(body node: FunctionDef|Lambda, carry param shift) or (None, 0)."""
+    idx, kword, _i, _ik, _c = COMBINATORS[combo]
+    node = call.args[idx] if idx < len(call.args) else kw(call.keywords, kword)
+    if node is None:
+        return None, 0
+    shift = 0
+    if isinstance(node, ast.Call):
+        d = dotted(node.func)
+        if d is not None and d.split(".")[-1] == "partial" and node.args:
+            shift = len(node.args) - 1
+            node = node.args[0]
+        else:
+            return None, 0
+    if isinstance(node, ast.Lambda):
+        return node, shift
+    if isinstance(node, ast.Name):
+        fn = by_name.get(node.id)
+        return fn, shift
+    return None, 0
+
+
+def _functions_by_name(tree) -> dict:
+    out: dict = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # last definition wins; name collisions make resolution
+            # ambiguous, so drop colliders to stay FP-averse
+            out[node.name] = None if node.name in out else node
+    return out
+
+
+def _carry_structs(body, combo: str, shift: int):
+    """Yield (label, struct, node) for each provable carry structure of
+    ``body``: parameter unpack and returns."""
+    _bi, _bk, _ii, _ik, carry_idx = COMBINATORS[combo]
+    params = positional_params(body) if not isinstance(body, ast.Lambda) \
+        else [a.arg for a in body.args.args]
+    idx = carry_idx + shift
+    carry_param = params[idx] if idx < len(params) else None
+
+    if isinstance(body, ast.Lambda):
+        env: dict = {}
+        out = body.body
+        if combo == "scan":
+            if isinstance(out, ast.Tuple) and len(out.elts) == 2:
+                s = _struct_of(out.elts[0], env)
+                if s is not None:
+                    yield ("returned carry", s, out)
+        else:
+            s = _struct_of(out, env)
+            if s is not None:
+                yield ("returned carry", s, out)
+        return
+
+    env = _local_structs(body.body)
+    if carry_param is not None:
+        for node in ast.walk(body):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], (ast.Tuple, ast.List)) \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id == carry_param:
+                tgt = node.targets[0]
+                if not any(isinstance(e, ast.Starred) for e in tgt.elts):
+                    yield ("carry unpacked in the body",
+                           ("tuple", len(tgt.elts)), node)
+                break
+    for node in ast.walk(body):
+        if not isinstance(node, ast.Return) or node.value is None:
+            continue
+        if any(isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda))
+               for p in _walk_parents(body, node)):
+            continue  # returns of nested defs are not the body's carry
+        if combo == "scan":
+            val = node.value
+            if isinstance(val, ast.Tuple) and len(val.elts) == 2:
+                s = _struct_of(val.elts[0], env)
+                if s is not None:
+                    yield ("returned carry", s, node)
+        else:
+            s = _struct_of(node.value, env)
+            if s is not None:
+                yield ("returned carry", s, node)
+
+
+def _walk_parents(root, target):
+    """Ancestor chain of ``target`` inside ``root`` (small local search —
+    bodies are short; avoids needing the file-level parent map)."""
+    chain: list = []
+
+    def visit(node, stack):
+        if node is target:
+            chain.extend(stack)
+            return True
+        return any(visit(c, stack + [node])
+                   for c in ast.iter_child_nodes(node))
+
+    visit(root, [])
+    return chain[1:]  # drop root itself
+
+
+@register("SCANCARRY", "lax.scan/while_loop/fori_loop body whose carry-out "
+                       "structure provably differs from carry-in")
+def check(ctx):
+    lax_imports = _lax_imports(ctx.tree)
+    by_name = _functions_by_name(ctx.tree)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        combo = _combinator_of(node, lax_imports)
+        if combo is None:
+            continue
+        _bi, _bk, init_idx, init_kw, _c = COMBINATORS[combo]
+        init = node.args[init_idx] if init_idx < len(node.args) \
+            else kw(node.keywords, init_kw)
+        structs: list = []
+        if init is not None:
+            fn = ctx.enclosing_function(node)
+            env = _local_structs(fn.body) if fn is not None \
+                else _local_structs(ctx.tree.body)
+            s = _struct_of(init, env)
+            if s is not None:
+                structs.append((f"`{combo}` init", s, node))
+        body, shift = _resolve_body(node, combo, by_name)
+        if body is not None:
+            structs.extend(_carry_structs(body, combo, shift))
+        for i in range(1, len(structs)):
+            label0, s0, _n0 = structs[0]
+            label, s, where = structs[i]
+            if s != s0:
+                yield ctx.finding(
+                    where if where.lineno else node, "SCANCARRY",
+                    f"carry structure mismatch in `{combo}`: {label0} is "
+                    f"{_describe(s0)} but {label} is {_describe(s)} — the "
+                    f"carry pytree must be identical in and out or the "
+                    f"trace fails (dropped slot / extra slot / renamed "
+                    f"key)")

@@ -8,31 +8,41 @@ An entry point that takes a batch and never routes it through ``shard``
 works fine on one device and silently stops scaling on a mesh — the same
 class of regression PR 3 fixed by annotating the serving forward.
 
-Granularity is per module: a ``serve/``/``train/`` module that calls
-``shard`` anywhere is considered to uphold the contract (the call site is
-usually a jitted inner forward, not the entry point itself).  In a module
-with *no* ``shard`` call, every public batch-bearing entry point is
-flagged: top-level public functions, public methods of public classes, and
-functions nested one level inside public factories (the ``make_*`` pattern
-returns the real entry point).  Delegating modules — where sharding is the
-loss's or model's contract — carry a pragma naming the delegate.
+Granularity differs by mode.  The *per-file* check (single-file lints,
+no project graph) is the degraded approximation: a ``serve/``/``train/``
+module that calls ``shard`` anywhere is considered to uphold the
+contract.  The *project pass replaces it* with the real semantics: each
+batch-bearing entry point must have a ``shard`` call somewhere on its
+*reachable* call chain — resolved across modules — so a module whose only
+``shard`` sits in a function the entry point never calls now fires
+(invisible to v1), and an entry point that delegates sharding to an
+imported forward is now accepted without a pragma.  Audited entry
+points: top-level public functions, public methods of public classes,
+and functions nested one level inside public factories (the ``make_*``
+pattern returns the real entry point).  Entry points whose sharding
+happens behind a callable the resolver cannot follow (a stored function
+attribute, a callback argument) carry a pragma naming the delegate.
 """
 
 from __future__ import annotations
 
 import ast
 
-from repro.tools.jaxlint.core import register
+from repro.tools.jaxlint.core import register, register_project
 
 
-def _module_calls_shard(tree: ast.Module) -> bool:
-    for node in ast.walk(tree):
+def _calls_shard(root) -> bool:
+    for node in ast.walk(root):
         if isinstance(node, ast.Call):
             f = node.func
             if (isinstance(f, ast.Name) and f.id == "shard") or \
                     (isinstance(f, ast.Attribute) and f.attr == "shard"):
                 return True
     return False
+
+
+def _module_calls_shard(tree: ast.Module) -> bool:
+    return _calls_shard(tree)
 
 
 def _entry_points(tree: ast.Module):
@@ -74,3 +84,40 @@ def check(ctx):
             f"batch-bearing entry point `{qual}({hit})` — module never "
             f"routes inputs through dist.sharding.shard; annotate the "
             f"batch axis or carry a pragma naming where sharding happens")
+
+
+def _batch_param(fn, batchy) -> str | None:
+    a = fn.args
+    params = [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+    return next((p for p in params if p in batchy), None)
+
+
+@register_project("SHARD", replaces_file=True)
+def project_check(project, targets):
+    """Replaces the per-file check: an entry point upholds the contract iff
+    a ``shard`` call is *reachable* from it through resolved calls (any
+    module) — not merely present somewhere in the same file."""
+    cfg = project.config
+    batchy = set(cfg.batch_param_names)
+    for path in targets:
+        ctx = project.files.get(path)
+        if ctx is None:
+            continue
+        mpath = ctx.module_path
+        if mpath.endswith("__init__.py") or not any(
+                mpath.startswith(p) for p in cfg.shard_module_prefixes):
+            continue
+        for fn in _entry_points(ctx.tree):
+            hit = _batch_param(fn, batchy)
+            if hit is None:
+                continue
+            if any(_calls_shard(f)
+                   for _p, f in project.reachable(path, fn)):
+                continue
+            qual = ctx.qualnames.get(fn, fn.name)
+            yield ctx.finding(
+                fn, "SHARD",
+                f"batch-bearing entry point `{qual}({hit})` — no "
+                f"dist.sharding.shard call is reachable from it (calls "
+                f"resolved across modules); annotate the batch axis or "
+                f"carry a pragma naming the unresolvable delegate")

@@ -15,14 +15,26 @@ parameters (minus statics) are tainted, assignments propagate taint, and
 are static under tracing, so ``if x.shape[0] > 1:`` is fine).  Nested
 function defs (scan bodies, ``pl.when`` callees) inherit the outer taint
 plus their own parameters.
+
+The *project pass* makes the taint interprocedural: when a traced
+function passes a tainted value into a call that resolves to a helper
+anywhere in the project (``train/step`` handing its loop counter to
+``data/pipeline.batch_at``), the helper's body is scanned with those
+parameters tainted, recursively up to ``config.max_call_depth`` hops.
+Findings land at the *caller's* call site (the file whose analysis
+produced them — the cache-attribution invariant), with the helper's own
+location threaded through the message.  Helpers that are themselves
+traced in their own module are skipped: their file's per-file run already
+covers them.
 """
 
 from __future__ import annotations
 
 import ast
 
-from repro.tools.jaxlint.astutil import all_params, traced_functions
-from repro.tools.jaxlint.core import register
+from repro.tools.jaxlint.astutil import (all_params, positional_params,
+                                         traced_functions)
+from repro.tools.jaxlint.core import Finding, register, register_project
 
 #: attribute accesses that yield static (non-traced) values
 NEUTRAL_ATTRS = frozenset({"shape", "ndim", "dtype", "size"})
@@ -149,3 +161,100 @@ def check(ctx):
         scan = _FnScan(ctx, ctx.qualnames.get(fn, fn.name))
         scan.run(fn.body, set(tainted))
         yield from scan.findings
+
+
+# -- interprocedural project pass -------------------------------------------
+
+class _CallTaint(_FnScan):
+    """Same scan, but also records every call with the taint set live at
+    the moment it is reached (nested-def calls carry the inner taint)."""
+
+    def __init__(self, ctx, fn_name: str):
+        super().__init__(ctx, fn_name)
+        self.calls: list = []
+
+    def expr_taint(self, node, tainted, hits: list) -> bool:
+        if isinstance(node, ast.Call):
+            self.calls.append((node, set(tainted)))
+        return super().expr_taint(node, tainted, hits)
+
+
+def _expr_has_taint(node, tainted) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Attribute) and node.attr in NEUTRAL_ATTRS:
+        return False
+    return any(_expr_has_taint(c, tainted)
+               for c in ast.iter_child_nodes(node))
+
+
+def _tainted_params(call: ast.Call, tainted, cfn) -> frozenset:
+    """Callee parameter names receiving a tainted argument at this call."""
+    params = positional_params(cfn)
+    tset = set()
+    for i, a in enumerate(call.args):
+        if i < len(params) and _expr_has_taint(a, tainted):
+            tset.add(params[i])
+    for k in call.keywords:
+        if k.arg and _expr_has_taint(k.value, tainted):
+            tset.add(k.arg)
+    tset.discard("self")
+    return frozenset(tset)
+
+
+def _flow(project, path: str, fn, tparams, depth, seen, traced_in) -> list:
+    """Findings inside ``fn`` (attributed to ``path``) when ``tparams``
+    arrive traced, plus deeper flows re-attributed to fn's call sites."""
+    ctx = project.files[path]
+    scan = _CallTaint(ctx, ctx.qualnames.get(fn, fn.name))
+    t = set(tparams)
+    scan.run(fn.body, t)
+    return list(scan.findings) + _outgoing(project, path, scan.calls,
+                                           depth, seen, traced_in)
+
+
+def _outgoing(project, path: str, calls, depth, seen, traced_in) -> list:
+    if depth > project.config.max_call_depth:
+        return []
+    out: list = []
+    for call, tsnap in calls:
+        if not tsnap:
+            continue
+        for cpath, cfn in project.resolve_call(path, call):
+            if cfn in traced_in(cpath):
+                continue  # traced in its own file: covered per-file there
+            tset = _tainted_params(call, tsnap, cfn)
+            key = (id(cfn), tset)
+            if not tset or key in seen:
+                continue
+            seen.add(key)
+            cqual = project.files[cpath].qualnames.get(cfn, cfn.name)
+            for f in _flow(project, cpath, cfn, tset, depth + 1, seen,
+                           traced_in):
+                out.append(Finding(
+                    path=path, line=call.lineno, rule="TRACERBRANCH",
+                    message=f"traced value flows into `{cqual}` "
+                            f"({f.path}:{f.line}): {f.message}"))
+    return out
+
+
+@register_project("TRACERBRANCH")
+def project_check(project, targets):
+    traced_cache: dict = {}
+
+    def traced_in(p: str) -> dict:
+        if p not in traced_cache:
+            traced_cache[p] = traced_functions(project.files[p].tree)
+        return traced_cache[p]
+
+    for path in targets:
+        ctx = project.files.get(path)
+        if ctx is None:
+            continue
+        for fn, tainted in traced_in(path).items():
+            scan = _CallTaint(ctx, ctx.qualnames.get(fn, fn.name))
+            scan.run(fn.body, set(tainted))
+            # the per-file check already reported scan.findings; only the
+            # cross-call flows are new
+            yield from _outgoing(project, path, scan.calls, 1, set(),
+                                 traced_in)

@@ -1,0 +1,57 @@
+"""SARIF 2.1.0 serialization of jaxlint findings.
+
+SARIF (Static Analysis Results Interchange Format) is the schema GitHub
+code scanning and most SA dashboards ingest; emitting it makes jaxlint
+findings first-class CI artifacts instead of log lines.  One run, one
+tool (``jaxlint``), one result per finding; rule metadata comes from the
+registry so the ``ruleIndex`` cross-references resolve.  The synthetic
+PRAGMA / SYNTAX rules are appended so their findings validate too.
+"""
+
+from __future__ import annotations
+
+SARIF_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+                "master/Schemata/sarif-schema-2.1.0.json")
+SARIF_VERSION = "2.1.0"
+
+
+def sarif_report(findings, rules: dict | None = None) -> dict:
+    """SARIF run dict for ``findings`` (rule name -> summary in ``rules``;
+    defaults to the live registry)."""
+    if rules is None:
+        from repro.tools.jaxlint.core import available_rules
+        rules = available_rules()
+    rules = dict(rules)
+    rules.setdefault("PRAGMA", "malformed suppression pragma "
+                               "(reasonless or unknown rule)")
+    rules.setdefault("SYNTAX", "syntax error prevents linting")
+    rule_ids = sorted(rules)
+    index = {rid: i for i, rid in enumerate(rule_ids)}
+    return {
+        "$schema": SARIF_SCHEMA,
+        "version": SARIF_VERSION,
+        "runs": [{
+            "tool": {
+                "driver": {
+                    "name": "jaxlint",
+                    "informationUri": "docs/jaxlint.md",
+                    "rules": [{
+                        "id": rid,
+                        "shortDescription": {"text": rules[rid]},
+                    } for rid in rule_ids],
+                },
+            },
+            "results": [{
+                "ruleId": f.rule,
+                "ruleIndex": index.get(f.rule, -1),
+                "level": "error",
+                "message": {"text": f.message},
+                "locations": [{
+                    "physicalLocation": {
+                        "artifactLocation": {"uri": f.path},
+                        "region": {"startLine": f.line},
+                    },
+                }],
+            } for f in findings],
+        }],
+    }

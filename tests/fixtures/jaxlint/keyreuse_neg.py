@@ -1,0 +1,40 @@
+"""KEYREUSE negatives: the blessed split/fold_in idioms stay silent."""
+
+import jax
+import jax.random as jr
+import numpy as np
+
+
+def split_idiom(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (8,))
+    b = jax.random.uniform(k2, (8,))
+    return a + b
+
+
+def fold_in_loop(key, n):
+    out = []
+    for i in range(n):
+        k = jax.random.fold_in(key, i)  # derivation, not consumption
+        out.append(jax.random.normal(k, (2,)))
+    return out
+
+
+def carry_split_loop(key, n):
+    out = []
+    for _i in range(n):
+        key, sub = jr.split(key)  # key is rebound every iteration
+        out.append(jr.normal(sub, (2,)))
+    return out
+
+
+def exclusive_branches(key, flag):
+    if flag:
+        return jax.random.normal(key, (2,))
+    return jax.random.uniform(key, (2,))
+
+
+def numpy_is_stateful(n):
+    a = np.random.normal(0.0, 1.0, n)  # np.random reuse is not a hazard
+    b = np.random.normal(0.0, 1.0, n)
+    return a, b

@@ -1,0 +1,35 @@
+"""KEYREUSE positives: same key, same bits."""
+
+import jax
+import jax.random as jr
+from jax import random
+from jax.random import normal as sample_normal
+
+
+def pair_reuse(key):
+    a = jax.random.normal(key, (8,))
+    b = jax.random.uniform(key, (8,))  # FINDING
+    return a + b
+
+
+def split_then_reuse(key):
+    k1, k2 = jr.split(key)
+    noise = jr.normal(key, (4,))  # FINDING
+    return k1, k2, noise
+
+
+def loop_reuse(key, n):
+    out = []
+    for _i in range(n):
+        out.append(random.normal(key, (2,)))  # FINDING
+    return out
+
+
+def comp_reuse(key, n):
+    return [sample_normal(key, (2,)) for _ in range(n)]  # FINDING
+
+
+def keyword_spelling(key):
+    a = jax.random.bernoulli(key=key, p=0.5)
+    b = jax.random.bernoulli(key=key, p=0.5)  # FINDING
+    return a, b

@@ -1,0 +1,19 @@
+"""Caller: reads state after donating it to an imported step."""
+
+import repro.models.steps as steps
+from repro.models.steps import apply_update
+
+
+def drive(state, grads):
+    new_state = apply_update(state, grads)
+    return state, new_state  # FINDING
+
+
+def drive_alias(state, grads):
+    out = steps.apply_update(state, grads)
+    return state, out  # FINDING
+
+
+def drive_rebound(state, grads):
+    state = apply_update(state, grads)
+    return state  # rebinding on the call line: the blessed idiom

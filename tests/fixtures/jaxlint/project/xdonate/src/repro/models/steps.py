@@ -1,0 +1,10 @@
+"""Donating step, defined here, consumed from loop.py."""
+
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def apply_update(state, grads):
+    return jax.tree_util.tree_map(lambda p, g: p - g, state, grads)

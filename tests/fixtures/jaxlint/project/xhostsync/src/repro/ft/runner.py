@@ -1,0 +1,9 @@
+"""Hot-loop module calling a helper that host-syncs in another module."""
+
+from repro.ft.metrics import summarize
+
+
+def run(state, steps):
+    for _ in range(steps):
+        state = state + 1
+    return summarize(state)  # FINDING

@@ -1,0 +1,9 @@
+"""Kernel whose misaligned block dim hides behind an imported constant."""
+
+from jax.experimental import pallas as pl
+
+from repro.kernels.foo.tiles import BLOCK_N
+
+
+def build_spec():
+    return pl.BlockSpec((8, BLOCK_N), lambda i: (i, 0))  # FINDING

@@ -1,0 +1,3 @@
+"""Tile constants imported by kernel.py."""
+
+BLOCK_N = 96

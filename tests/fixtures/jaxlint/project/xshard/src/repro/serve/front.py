@@ -1,0 +1,8 @@
+"""Entry point whose sharding happens one resolved call away, in another
+module — a per-file false positive the project pass removes."""
+
+from repro.serve.annotations import wrap
+
+
+def serve_batch(batch):
+    return wrap(batch)

@@ -1,0 +1,12 @@
+"""A shard call exists in this module — but the entry point never reaches
+it, which the per-file module-string-match provably missed."""
+
+from repro.dist.sharding import shard
+
+
+def annotate(x):
+    return shard(x, "batch", None)
+
+
+def infer(batch):  # FINDING
+    return batch * 2

@@ -1,0 +1,10 @@
+"""Caller: traced forward hands its input to an imported helper."""
+
+import jax
+
+from repro.models.util import pick
+
+
+@jax.jit
+def forward(x):
+    return pick(x)  # FINDING

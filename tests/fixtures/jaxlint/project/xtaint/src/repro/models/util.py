@@ -1,0 +1,7 @@
+"""Helper module: branches on its argument — fine unless called traced."""
+
+
+def pick(v):
+    if v > 0:
+        return v
+    return -v

@@ -1,0 +1,44 @@
+"""RECOMPILE negatives: bind-once jits and static literals stay silent."""
+
+import functools
+
+import jax
+
+
+@jax.jit
+def step(v):
+    return v * 2
+
+
+def hot_loop(xs):
+    outs = []
+    for x in xs:
+        outs.append(step(x))  # calling a prebuilt jit is fine
+    return outs
+
+
+def make_step(scale):
+    # the blessed factory idiom: the jit is built once and returned
+    @functools.partial(jax.jit, static_argnames=("width",))
+    def padded(v, width):
+        return v * scale
+    return padded
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def pad_to(v, width):
+    return v
+
+
+def static_literal_under_loop(xs):
+    y = xs
+    for x in xs:
+        y = pad_to(x, width=16)  # literal static: one trace total
+    return y
+
+
+def static_from_outer_scope(xs, width):
+    y = xs
+    for x in xs:
+        y = pad_to(x, width=width)  # not a loop variable
+    return y

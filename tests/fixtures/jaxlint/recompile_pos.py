@@ -1,0 +1,52 @@
+"""RECOMPILE positives: jit re-trace hazards."""
+
+import functools
+
+import jax
+
+
+def jit_in_loop(f, xs):
+    outs = []
+    for x in xs:
+        outs.append(jax.jit(f)(x))  # FINDING
+    return outs
+
+
+def decorated_in_loop(xs):
+    outs = []
+    for x in xs:
+        @jax.jit
+        def step(v):  # FINDING
+            return v * 2
+        outs.append(step(x))
+    return outs
+
+
+def immediate_invoke(x):
+    return jax.jit(lambda v: v + 1)(x)  # FINDING
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def padded(v, width):
+    return v
+
+
+def static_name_loop_feed(xs):
+    y = xs
+    for width in (1, 2, 3):
+        y = padded(y, width=width)  # FINDING
+    return y
+
+
+def run_bucket(v, size):
+    return v
+
+
+bucketed = jax.jit(run_bucket, static_argnums=(1,))
+
+
+def static_num_loop_feed(xs):
+    y = xs
+    for size in (8, 16):
+        y = bucketed(y, size)  # FINDING
+    return y

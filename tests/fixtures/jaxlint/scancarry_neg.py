@@ -1,0 +1,58 @@
+"""SCANCARRY negatives: threaded carries and unknown structures stay silent."""
+
+from functools import partial
+
+from jax import lax
+
+
+def threaded(xs):
+    def scan_body(carry, x):
+        loss, count = carry
+        return (loss + x, count + 1), x
+    return lax.scan(scan_body, (0.0, 0), xs)
+
+
+def dict_state(xs):
+    def dict_body(c, x):
+        return {"w": c["w"] + x, "b": c["b"]}, x
+    return lax.scan(dict_body, {"w": 0.0, "b": 0.0}, xs)
+
+
+def partial_bound(xs, scale):
+    def pbody(scale_, carry, x):
+        a, b = carry
+        return (a * scale_, b + x), x
+    return lax.scan(pbody_bound(scale), (1.0, 0.0), xs)
+
+
+def pbody_bound(scale):
+    return partial(lambda s, c, x: ((c[0] * s, c[1] + x), x), scale)
+
+
+def partial_inline(xs, scale):
+    def ibody(scale_, carry, x):
+        a, b = carry
+        return (a * scale_, b + x), x
+    return lax.scan(partial(ibody, scale), (1.0, 0.0), xs)
+
+
+def unknown_stays_silent(xs, init):
+    def ubody(c, x):
+        return c, x  # carry structure unknown: no claim, no finding
+    return lax.scan(ubody, init, xs)
+
+
+def while_ok(limit):
+    def wcond(c):
+        return c[0] < limit
+
+    def wbody(c):
+        i, total = c
+        return (i + 1, total + i)
+    return lax.while_loop(wcond, wbody, (0, 0))
+
+
+def fori_ok(n):
+    def fbody(i, c):
+        return {"sum": c["sum"] + i, "mx": c["mx"]}
+    return lax.fori_loop(0, n, fbody, {"sum": 0, "mx": 0})

@@ -1,0 +1,48 @@
+"""SCANCARRY positives: carry-out structure provably differs from carry-in."""
+
+from functools import partial
+
+from jax import lax
+
+
+def dropped_slot(xs):
+    def scan_body(carry, x):
+        loss, count = carry
+        return (loss + x,), x  # FINDING
+    return lax.scan(scan_body, (0.0, 0), xs)
+
+
+def extra_key(xs):
+    init = {"w": 1.0, "b": 0.0}
+
+    def dict_body(c, x):
+        c2 = {"w": c["w"] + x, "b": c["b"], "m": x}
+        return c2, x  # FINDING
+    return lax.scan(dict_body, init, xs)
+
+
+def while_arity(limit):
+    def wcond(c):
+        return c[0] < limit
+
+    def wbody(c):
+        i, total = c
+        return (i + 1, total + i, i)  # FINDING
+    return lax.while_loop(wcond, wbody, (0, 0))
+
+
+def fori_renamed_key(n):
+    def fbody(i, c):
+        return {"sum": c["sum"] + i, "max": c["mx"]}  # FINDING
+    return lax.fori_loop(0, n, fbody, {"sum": 0, "mx": 0})
+
+
+def lambda_shrink(xs):
+    return lax.scan(lambda c, x: ((c[0],), x), (0.0, 1.0), xs)  # FINDING
+
+
+def partial_bound_mismatch(xs, scale):
+    def pbody(scale_, carry, x):
+        a, b = carry
+        return (a * scale_,), x  # FINDING
+    return lax.scan(partial(pbody, scale), (1.0, 0.0), xs)

@@ -1,14 +1,20 @@
 """Tier-1 tests for repro.tools.jaxlint.
 
-Two layers:
+Three layers:
 
-* the repo gate — ``src/`` must lint clean (zero unsuppressed findings;
-  every pragma carries a reason), same contract CI enforces via
-  ``scripts/check_lints.py``;
+* the repo gate — ``src/`` plus the extra scan dirs must lint clean
+  (zero unsuppressed findings; every pragma carries a reason), same
+  contract CI enforces via ``scripts/check_lints.py``, and the
+  dead-exports allowlist must gate clean;
 * golden fixtures — one positive and one negative snippet per rule under
   ``tests/fixtures/jaxlint/``.  Positive fixtures mark every expected
   finding line with a ``# FINDING`` comment, and the test asserts the
-  analyzer reports exactly those lines (no more, no fewer).
+  analyzer reports exactly those lines (no more, no fewer) — across ALL
+  rules, so a fixture written for one rule cannot silently trip another;
+* project fixtures — mini-repos under ``tests/fixtures/jaxlint/project/``
+  whose marked findings only exist interprocedurally: the per-file v1
+  view provably misses them, ``lint_project`` catches them.  The cache
+  and SARIF layers are tested on the same mini-repos.
 """
 
 import pathlib
@@ -17,11 +23,15 @@ import pytest
 
 from repro.tools.jaxlint import (PRAGMA_RULE, RULES, available_rules,
                                  lint_repo, lint_source, parse_pragmas)
-from repro.tools.jaxlint.core import Finding
-from repro.tools.jaxlint.deadexports import dead_exports
+from repro.tools.jaxlint.core import Finding, LintConfig, lint_project
+from repro.tools.jaxlint.deadexports import (dead_exports,
+                                             dead_exports_gate,
+                                             parse_allowlist)
+from repro.tools.jaxlint.sarif import sarif_report
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 FIXTURES = REPO_ROOT / "tests" / "fixtures" / "jaxlint"
+ALLOWLIST = REPO_ROOT / "scripts" / "dead_exports_allowlist.txt"
 
 #: fixture stem -> path the snippet pretends to live at (rules key off it);
 #: full-stem entries win over per-rule ones
@@ -32,6 +42,9 @@ PRETEND_PATHS = {
     "donate": "src/repro/models/loops.py",  # outside the SHARD domain
     "shard": "src/repro/serve/steps.py",
     "pallastile": "src/repro/kernels/fix/kernel.py",
+    "keyreuse": "src/repro/models/rng.py",
+    "recompile": "src/repro/models/jits.py",
+    "scancarry": "src/repro/models/sweeps.py",
 }
 
 
@@ -129,8 +142,8 @@ def test_pragma_rule_is_not_suppressible():
 
 def test_registry_has_the_contract_rules():
     names = set(available_rules())
-    assert {"HOSTSYNC", "TRACERBRANCH", "DONATE", "SHARD",
-            "PALLASTILE"} <= names
+    assert {"HOSTSYNC", "TRACERBRANCH", "DONATE", "SHARD", "PALLASTILE",
+            "KEYREUSE", "RECOMPILE", "SCANCARRY"} <= names
     assert all(n == n.upper() for n in names)
 
 
@@ -169,3 +182,220 @@ def test_dead_exports_smoke_on_this_repo():
     assert set(dead) == {"symbols", "modules"}
     # identifier-based usage: anything this very test references is alive
     assert all(n != "dead_exports" for _m, n, _l in dead["symbols"])
+
+
+# --- the whole-fixture property: markers exact, negatives clean, ALL rules -
+
+@pytest.mark.parametrize(
+    "name", sorted(p.stem for p in FIXTURES.glob("*_pos.py")))
+def test_every_pos_fixture_markers_are_exact(name):
+    source = fixture_source(name)
+    expected = marked_lines(source)
+    assert expected, f"{name}.py has no # FINDING markers"
+    findings = lint_fixture(name)
+    assert sorted(f.line for f in findings) == expected, findings
+
+
+@pytest.mark.parametrize(
+    "name", sorted(p.stem for p in FIXTURES.glob("*_neg.py")))
+def test_every_neg_fixture_is_clean_under_all_rules(name):
+    assert lint_fixture(name) == []
+
+
+# --- pragma extensions: multiple pragmas / mixed known-unknown -------------
+
+def test_two_pragmas_on_one_line():
+    src = ("y = g(x)  # jaxlint: disable=HOSTSYNC -- io boundary "
+           "# jaxlint: disable=SHARD -- delegate\n")
+    suppress, problems = parse_pragmas(src, "p.py")
+    assert suppress == {1: {"HOSTSYNC", "SHARD"}}
+    assert problems == []
+
+
+def test_multi_rule_pragma_with_unknown_name_keeps_known():
+    src = "y = g(x)  # jaxlint: disable=HOSTSYNC,BOGUS -- reason\n"
+    suppress, problems = parse_pragmas(src, "p.py")
+    assert suppress == {1: {"HOSTSYNC"}}
+    assert [p.rule for p in problems] == [PRAGMA_RULE]
+    assert "BOGUS" in problems[0].message
+
+
+def test_multi_rule_pragma_suppresses_both_rules_end_to_end():
+    src = ("import jax\n\n\ndef loop(f, xs):\n"
+           "    key = jax.random.PRNGKey(0)\n"
+           "    for x in xs:\n"
+           "        y = jax.jit(f)(jax.random.normal(key, (2,)))"
+           "  # jaxlint: disable=RECOMPILE,KEYREUSE -- demo code\n"
+           "    return y\n")
+    assert lint_source(src, "src/repro/models/demo.py") == []
+
+
+# --- interprocedural project fixtures --------------------------------------
+
+PROJECT_CASES = {
+    "xtaint": "TRACERBRANCH",
+    "xdonate": "DONATE",
+    "xshard": "SHARD",
+    "xhostsync": "HOSTSYNC",
+    "xpallastile": "PALLASTILE",
+}
+
+
+def project_fixture(case: str) -> dict[str, str]:
+    base = FIXTURES / "project" / case
+    return {p.relative_to(base).as_posix(): p.read_text()
+            for p in sorted(base.rglob("*.py"))}
+
+
+@pytest.mark.parametrize("case,rule", sorted(PROJECT_CASES.items()))
+def test_project_pass_catches_what_per_file_missed(case, rule):
+    files = project_fixture(case)
+    expected = {(p, i) for p, src in files.items()
+                for i in marked_lines(src)}
+    assert expected, f"project/{case} has no # FINDING markers"
+    # v1 per-file view: every marked finding is invisible
+    v1 = [f for p, src in files.items() for f in lint_source(src, p)]
+    assert not ({(f.path, f.line) for f in v1} & expected), v1
+    # v2 whole-program view: exactly the marked findings, right rule
+    v2 = lint_project(files).findings
+    assert {(f.path, f.line) for f in v2} == expected, v2
+    assert all(f.rule == rule for f in v2), v2
+
+
+def test_shard_project_pass_removes_per_file_false_positive():
+    files = project_fixture("xshard")
+    front = "src/repro/serve/front.py"
+    v1 = lint_source(files[front], front)
+    assert [f.rule for f in v1] == ["SHARD"]  # v1 false positive
+    v2 = lint_project(files).findings
+    assert all(f.path != front for f in v2)   # resolved cross-module
+
+
+def test_project_findings_attributed_to_origin_files():
+    # attribution discipline: the callee file carries no findings, so its
+    # cached (empty) result stays valid when only callers change
+    for case in PROJECT_CASES:
+        files = project_fixture(case)
+        marked_files = {p for p, src in files.items() if marked_lines(src)}
+        for f in lint_project(files).findings:
+            assert f.path in marked_files, (case, f)
+
+
+# --- incremental cache ------------------------------------------------------
+
+CACHE_FILES = {
+    "src/repro/models/aa.py": "def helper(v):\n    return v\n",
+    "src/repro/models/bb.py": ("from repro.models.aa import helper\n\n\n"
+                               "def use(x):\n    return helper(x)\n"),
+    "src/repro/models/cc.py": "Z = 1\n",
+}
+
+
+def test_cache_cold_then_warm(tmp_path):
+    cache = tmp_path / "cache.json"
+    r1 = lint_project(dict(CACHE_FILES), cache_path=cache)
+    assert (r1.stats.analyzed, r1.stats.reused) == (3, 0)
+    r2 = lint_project(dict(CACHE_FILES), cache_path=cache)
+    assert (r2.stats.analyzed, r2.stats.reused) == (0, 3)
+    assert "0/3" in r2.stats.line() and "3 from cache" in r2.stats.line()
+
+
+def test_cache_edit_invalidates_importers_only(tmp_path):
+    cache = tmp_path / "cache.json"
+    lint_project(dict(CACHE_FILES), cache_path=cache)
+    edited = dict(CACHE_FILES)
+    edited["src/repro/models/aa.py"] += "\nX = 2\n"
+    r = lint_project(edited, cache_path=cache)
+    # aa (changed) + bb (imports aa) re-analyzed; cc untouched
+    assert (r.stats.analyzed, r.stats.reused) == (2, 1)
+
+
+def test_cache_preserves_cross_module_findings(tmp_path):
+    cache = tmp_path / "cache.json"
+    files = project_fixture("xtaint")
+    cold = lint_project(files, cache_path=cache)
+    warm = lint_project(files, cache_path=cache)
+    assert cold.findings and warm.findings == cold.findings
+    assert warm.stats.analyzed == 0
+
+
+def test_cache_invalidates_on_config_change(tmp_path):
+    cache = tmp_path / "cache.json"
+    lint_project(dict(CACHE_FILES), cache_path=cache)
+    r = lint_project(dict(CACHE_FILES), cache_path=cache,
+                     config=LintConfig(max_call_depth=2))
+    assert r.stats.analyzed == 3  # different fingerprint: full re-analysis
+
+
+def test_parallel_jobs_match_serial():
+    files = project_fixture("xtaint")
+    assert lint_project(files, jobs=2).findings == \
+        lint_project(files).findings
+
+
+# --- SARIF ------------------------------------------------------------------
+
+def test_sarif_schema_shape():
+    doc = sarif_report([Finding("src/repro/x.py", 3, "HOSTSYNC", "m")])
+    assert doc["version"] == "2.1.0"
+    assert doc["$schema"].endswith("sarif-schema-2.1.0.json")
+    run = doc["runs"][0]
+    ids = [r["id"] for r in run["tool"]["driver"]["rules"]]
+    assert ids == sorted(ids)
+    assert {"HOSTSYNC", "PRAGMA", "SYNTAX", "KEYREUSE"} <= set(ids)
+    (res,) = run["results"]
+    assert res["ruleId"] == "HOSTSYNC" and res["level"] == "error"
+    assert run["tool"]["driver"]["rules"][res["ruleIndex"]]["id"] == \
+        "HOSTSYNC"
+    loc = res["locations"][0]["physicalLocation"]
+    assert loc["artifactLocation"]["uri"] == "src/repro/x.py"
+    assert loc["region"]["startLine"] == 3
+
+
+# --- dead-exports gate ------------------------------------------------------
+
+def test_dead_exports_gate_semantics(tmp_path):
+    pkg = tmp_path / "src" / "repro"
+    pkg.mkdir(parents=True)
+    (pkg / "mod.py").write_text("def dormant():\n    return 1\n")
+    allow = tmp_path / "allow.txt"
+
+    allow.write_text("# nothing allowlisted\n")
+    lines, code = dead_exports_gate(tmp_path, allow)
+    assert code == 1 and any("repro.mod.dormant" in ln for ln in lines)
+
+    allow.write_text("repro.mod.dormant -- parked for the next PR\n"
+                     "module:repro.mod -- parked for the next PR\n")
+    lines, code = dead_exports_gate(tmp_path, allow)
+    assert code == 0, lines
+
+    allow.write_text("repro.mod.dormant -- parked\n"
+                     "module:repro.mod -- parked\n"
+                     "repro.mod.gone -- no longer exists\n")
+    lines, code = dead_exports_gate(tmp_path, allow)
+    assert code == 1 and any("stale" in ln for ln in lines)
+
+    allow.write_text("repro.mod.dormant\nmodule:repro.mod -- parked\n")
+    lines, code = dead_exports_gate(tmp_path, allow)
+    assert code == 1 and any("no reason" in ln for ln in lines)
+
+
+def test_allowlist_parser_reads_reasons(tmp_path):
+    f = tmp_path / "a.txt"
+    f.write_text("# comment\n\nrepro.a.b -- why it stays\n")
+    entries, problems = parse_allowlist(f)
+    assert entries == {"repro.a.b": "why it stays"} and problems == []
+
+
+def test_dead_exports_gate_is_clean_on_this_repo():
+    lines, code = dead_exports_gate(REPO_ROOT, ALLOWLIST)
+    assert code == 0, "\n".join(lines)
+
+
+# --- repo scan coverage -----------------------------------------------------
+
+def test_repo_scan_covers_extra_dirs():
+    from repro.tools.jaxlint.core import iter_repo_files
+    tops = {p.relative_to(REPO_ROOT).parts[0]
+            for p in iter_repo_files(REPO_ROOT)}
+    assert {"src", "benchmarks", "examples", "scripts"} <= tops
