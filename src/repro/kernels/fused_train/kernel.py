@@ -1,14 +1,21 @@
-"""The paper's contribution as a TPU kernel: a whole-network fused training
-step (forward + backprop + SGD update) in a single ``pl.pallas_call``.
+"""The paper's contribution as a TPU kernel: whole-network fused training
+(forward + backprop + optimizer update) inside ``pl.pallas_call``.
 
-FPGA -> TPU mapping (DESIGN.md §2):
+FPGA -> TPU mapping (DESIGN.md §2), multi-step regime:
 
-* ALVEO: weights live in BRAM/FF for the entire run; samples stream through a
-  16-node block time-multiplexed over layers.
-* Here: all layer weights live in **VMEM scratch for the entire grid** —
-  loaded from HBM once (grid step 0), updated in-place every batch tile, and
-  written back to HBM once (last grid step).  The grid streams batch tiles,
-  so per-step HBM traffic is *samples only*, exactly the paper's regime.
+* ALVEO: weights live in BRAM/FF for the **entire training run** — the
+  bitstream is configured once, then samples stream past the resident
+  network until training ends.  Weight state never crosses the board's
+  memory boundary mid-run.
+* Here: all layer weights (and, for the Adam variant, both moment stacks)
+  live in **VMEM scratch across every step of a launch** — loaded from HBM
+  once at grid step 0, updated in place over all K steps x all batch tiles,
+  and written back to HBM once at the final grid step (see ``multistep.py``,
+  which flattens ``grid=(K * n_tiles,)`` over a pre-staged ``(K*B, PAD)``
+  sample stream).  Per-launch weight HBM traffic is 2 transfers regardless
+  of K — the single-step kernel in this file is the K=1 special case, where
+  chunked dispatch had to re-enter the kernel (and re-stream the weight
+  stack through HBM) every step.
 * The "16-node semi-parallel block" becomes a 128-lane MXU tile: every layer
   is zero-padded to PAD=128 so each layer's matmul is one aligned MXU op.
   Zero padding is self-preserving through fwd+bwd (zero rows/cols stay zero;
@@ -16,13 +23,21 @@ FPGA -> TPU mapping (DESIGN.md §2):
 
 Grid semantics: TPU grids execute sequentially on a core, which makes the
 read-modify-write of the scratch weights across grid steps sound (the same
-property the classic Pallas matmul accumulator uses).
+property the classic Pallas matmul accumulator uses).  That sequencing is
+exactly what makes the multi-step flattening legal: tile ``k*n_tiles + j``
+always sees the weights as updated by every earlier tile of every earlier
+step.
 
 Two update modes:
 * ``tile_batch = 1``  -> per-sample streaming SGD, the *faithful* FPGA
   algorithm (one update per training signal);
-* ``tile_batch = T``  -> minibatch-SGD per tile, the MXU-native reformulation
-  (beyond-paper optimization; see EXPERIMENTS.md §Perf).
+* ``tile_batch = T``  -> minibatch update per tile, the MXU-native
+  reformulation (beyond-paper optimization; see EXPERIMENTS.md §Perf).
+
+``train_tile`` is the shared per-tile body (forward, masked MSE loss,
+hand-derived backward, optimizer callback): the single-step kernel here and
+the multi-step kernels in ``multistep.py`` both inline it, which is what
+makes a K-step launch bit-identical to K single-step launches.
 """
 
 from __future__ import annotations
@@ -39,21 +54,18 @@ from repro.kernels.common import resolve_interpret
 PAD = 128  # MXU lane width; every layer is padded to this many nodes.
 
 
-def _kernel(x_ref, y_ref, w_in_ref, b_in_ref,            # inputs
-            w_out_ref, b_out_ref, loss_ref,               # outputs
-            w_s, b_s, h_s,                                # scratch
-            *, n_layers: int, out_dim: int, lr: float, n_tiles: int,
-            qat: bool):
-    i = pl.program_id(0)
+def train_tile(x, y, w_s, b_s, h_s, update, *, n_layers: int, out_dim: int,
+               qat: bool):
+    """One batch tile through the VMEM-resident net: forward, masked MSE
+    loss, backward (Eq. 2 of the paper), with the optimizer rule injected as
+    ``update(l, dw, db)`` — called once per layer, in backward order, with
+    the layer's raw gradients.  Returns the tile loss (f32 scalar).
 
-    # --- load weights into VMEM scratch once -------------------------------
-    @pl.when(i == 0)
-    def _init():
-        w_s[...] = w_in_ref[...]
-        b_s[...] = b_in_ref[...]
-
-    x = x_ref[...]           # (T, PAD) fp32, feature-padded with zeros
-    y = y_ref[...]           # (T, PAD) fp32, target-padded with zeros
+    Every fused kernel (single-step SGD, multi-step SGD, multi-step Adam)
+    runs this exact op sequence per tile, so their per-tile arithmetic is
+    bit-identical by construction — only the update rule and the grid
+    schedule differ.
+    """
     tb = x.shape[0]
 
     def maybe_fq(w):
@@ -77,9 +89,9 @@ def _kernel(x_ref, y_ref, w_in_ref, b_in_ref,            # inputs
     mask = (lane < out_dim).astype(jnp.float32)
     diff = (h - y) * mask
     denom = jnp.float32(tb * out_dim)
-    loss_ref[0, 0] = jnp.sum(diff * diff) / denom
+    loss = jnp.sum(diff * diff) / denom
 
-    # --- backward + in-scratch SGD update (Eq. 2 of the paper) ---------------
+    # --- backward + in-scratch optimizer update ------------------------------
     dz = 2.0 * diff / denom
     for l in range(n_layers - 1, -1, -1):
         h_prev = x if l == 0 else h_s[l - 1]
@@ -90,10 +102,36 @@ def _kernel(x_ref, y_ref, w_in_ref, b_in_ref,            # inputs
             relu_mask = (h_prev > 0.0).astype(jnp.float32)
         dw = jnp.dot(h_prev.T, dz, preferred_element_type=jnp.float32)
         db = jnp.sum(dz, axis=0)
-        w_s[l] = w_s[l] - lr * dw
-        b_s[l] = b_s[l] - lr * db
+        update(l, dw, db)
         if l > 0:
             dz = dh * relu_mask
+    return loss
+
+
+def _sgd_update(w_s, b_s, lr: float):
+    """The in-scratch SGD rule for ``train_tile`` (the paper's Eq. 2)."""
+    def update(l, dw, db):
+        w_s[l] = w_s[l] - lr * dw
+        b_s[l] = b_s[l] - lr * db
+    return update
+
+
+def _kernel(x_ref, y_ref, w_in_ref, b_in_ref,            # inputs
+            w_out_ref, b_out_ref, loss_ref,               # outputs
+            w_s, b_s, h_s,                                # scratch
+            *, n_layers: int, out_dim: int, lr: float, n_tiles: int,
+            qat: bool):
+    i = pl.program_id(0)
+
+    # --- load weights into VMEM scratch once -------------------------------
+    @pl.when(i == 0)
+    def _init():
+        w_s[...] = w_in_ref[...]
+        b_s[...] = b_in_ref[...]
+
+    loss_ref[0, 0] = train_tile(
+        x_ref[...], y_ref[...], w_s, b_s, h_s, _sgd_update(w_s, b_s, lr),
+        n_layers=n_layers, out_dim=out_dim, qat=qat)
 
     # --- flush updated weights to HBM once ----------------------------------
     @pl.when(i == n_tiles - 1)
@@ -113,6 +151,10 @@ def fused_train_call(x_pad, y_pad, w_pad, b_pad, *, n_layers: int, out_dim: int,
     b_pad: (L, PAD).  B must be a multiple of tile_batch.
     Returns (w_new, b_new, per_tile_losses (B//tile_batch,)).
     ``interpret=None`` auto-detects: compiled on TPU, interpreter elsewhere.
+
+    This is the single-step (K=1) kernel; multi-step launches with weights
+    resident across steps — and the in-kernel Adam variant — live in
+    ``multistep.py`` (``fused_train_multistep_call``).
     """
     interpret = resolve_interpret(interpret)
     batch, _ = x_pad.shape

@@ -13,6 +13,14 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.kernels.fused_train.kernel import PAD, fused_train_call
+from repro.kernels.fused_train.multistep import (fused_train_adam_call,
+                                                fused_train_multistep_call)
+from repro.optim.optimizers import AdamState
+
+# Optimizer rules the fused kernels implement in-VMEM.  Anything else must
+# use a stepwise backend (the kernel would silently train with the wrong
+# rule otherwise).
+FUSED_OPTIMIZERS = ("sgd", "adam")
 
 
 def pad_params(params):
@@ -63,24 +71,100 @@ def effective_tile(batch: int, tile_batch: int) -> int:
     return t
 
 
-def make_engine_step(*, lr: float, tile_batch: int = 128, qat: bool = False,
+def fused_train_multistep(params, opt_state, x, y, *, n_steps: int, lr: float,
+                          optimizer: str = "sgd", tile_batch: int = 128,
+                          qat: bool = False, interpret: bool | None = None):
+    """K training steps in **one** kernel launch, weights (and Adam moments)
+    VMEM-resident across all of them.
+
+    ``x``/``y``: ``(K*B, d_in)`` / ``(K*B, out_dim)`` — K steps' batches
+    pre-staged back to back (step k = rows ``[k*B, (k+1)*B)``).  The tile is
+    the largest divisor of the *per-step* batch B not exceeding
+    ``tile_batch``, so no tile ever straddles a step boundary and the grid
+    flattens cleanly to ``(K * n_tiles,)``.
+
+    ``opt_state``: for ``optimizer="adam"`` an ``optim.optimizers.AdamState``
+    (moments padded into kernel stacks, ``step`` advanced by one per tile —
+    the kernel performs one Adam update per tile); for ``"sgd"`` any state
+    with a ``step`` field (advanced by ``n_steps``) or ``None``.
+
+    Returns ``(new_params, new_opt_state, losses (K, n_tiles))`` — row k is
+    step k's per-tile losses, bit-identical to what K sequential
+    single-step fused calls would have produced.
+    """
+    total, d_in = x.shape
+    out_dim = y.shape[-1]
+    if total % n_steps:
+        raise ValueError(f"staged stream of {total} rows is not divisible "
+                         f"into n_steps={n_steps} equal batches")
+    per_step = total // n_steps
+    tile = effective_tile(per_step, tile_batch)
+    n_tiles = per_step // tile
+    assert d_in <= PAD, f"feature dim {d_in} > PAD={PAD}"
+    x_pad = jnp.zeros((total, PAD), jnp.float32).at[:, :d_in].set(x)
+    y_pad = jnp.zeros((total, PAD), jnp.float32).at[:, :out_dim].set(y)
+    w_pad, b_pad = pad_params(params)
+    if optimizer == "sgd":
+        w_new, b_new, tile_losses = fused_train_multistep_call(
+            x_pad, y_pad, w_pad, b_pad, n_layers=len(params), out_dim=out_dim,
+            lr=lr, tile_batch=tile, qat=qat, interpret=interpret)
+        if opt_state is not None and hasattr(opt_state, "step"):
+            new_opt = opt_state._replace(step=opt_state.step + n_steps)
+        else:
+            new_opt = opt_state
+    elif optimizer == "adam":
+        if not isinstance(opt_state, AdamState):
+            raise ValueError(
+                f"optimizer='adam' needs an AdamState, got {type(opt_state)!r}"
+                " — build it with optim.optimizers.adam(lr).init(params)")
+        mw_pad, mb_pad = pad_params(opt_state.mu)
+        vw_pad, vb_pad = pad_params(opt_state.nu)
+        step0 = opt_state.step.astype(jnp.int32).reshape(1, 1)
+        (w_new, b_new, mw_new, mb_new, vw_new, vb_new,
+         tile_losses) = fused_train_adam_call(
+            step0, x_pad, y_pad, w_pad, b_pad, mw_pad, mb_pad, vw_pad, vb_pad,
+            n_layers=len(params), out_dim=out_dim, lr=lr, tile_batch=tile,
+            qat=qat, interpret=interpret)
+        new_opt = AdamState(step=opt_state.step + n_steps * n_tiles,
+                            mu=unpad_params(mw_new, mb_new, params),
+                            nu=unpad_params(vw_new, vb_new, params))
+    else:
+        raise ValueError(
+            f"fused backend implements optimizers {FUSED_OPTIMIZERS}, got "
+            f"{optimizer!r}; use a stepwise backend for anything else")
+    return (unpad_params(w_new, b_new, params), new_opt,
+            tile_losses.reshape(n_steps, n_tiles))
+
+
+def make_engine_step(*, lr: float, optimizer: str = "sgd",
+                     tile_batch: int = 128, qat: bool = False,
                      interpret: bool | None = None):
     """The ``fused_step`` backend for ``repro.train.step.make_train_step``.
 
     Conforms the kernel to the engine contract
-    ``(params, aux, batch) -> (new_params, new_aux, metrics)``: the whole
-    grads+SGD-update pipeline runs inside the kernel, so there is no grad
-    pytree and no optimizer state to touch — aux passes through untouched and
-    the metrics carry the mean over per-tile losses (each tile sees params
-    already updated by its predecessors, the paper's sequential-SGD regime).
+    ``(params, opt_state, aux, batch) -> (new_params, new_opt_state,
+    new_aux, metrics)``: the whole grads+update pipeline runs inside the
+    kernel with the engine's configured rule — in-kernel SGD (the paper's
+    FPGA algorithm) or in-kernel Adam (moment stacks resident next to the
+    weights).  aux passes through untouched and the metrics carry the mean
+    over per-tile losses (each tile sees params already updated by its
+    predecessors, the paper's sequential-update regime).
 
     ``tile_batch`` is a ceiling: the actual tile is the largest divisor of
-    the (static) batch size not exceeding it.
+    the (static) batch size not exceeding it.  Raises ``ValueError`` for an
+    optimizer the kernel does not implement — silently training with the
+    wrong rule is the one thing this backend must never do.
     """
-    def fused(params, aux, batch):
-        new_params, losses = fused_train_step(
-            params, batch["x"], batch["y"], lr=lr,
-            tile_batch=effective_tile(batch["x"].shape[0], tile_batch),
-            qat=qat, interpret=interpret)
-        return new_params, aux, {"loss": jnp.mean(losses)}
+    if optimizer not in FUSED_OPTIMIZERS:
+        raise ValueError(
+            f"fused-pallas trains in-kernel and implements only "
+            f"{FUSED_OPTIMIZERS}; got optimizer={optimizer!r}. Use "
+            f"backend='float' (or another stepwise backend) for it.")
+
+    def fused(params, opt_state, aux, batch):
+        new_params, new_opt, losses = fused_train_multistep(
+            params, opt_state, batch["x"], batch["y"], n_steps=1, lr=lr,
+            optimizer=optimizer, tile_batch=tile_batch, qat=qat,
+            interpret=interpret)
+        return new_params, new_opt, aux, {"loss": jnp.mean(losses, axis=1)[0]}
     return fused

@@ -90,9 +90,8 @@ def run_mrf(args, cfg) -> int:
             raise SystemExit("--microbatches/--grad-compress have no effect "
                              "with --backend fused-pallas (the update is "
                              "computed in-kernel)")
-        if optimizer != "sgd":
-            raise SystemExit("--backend fused-pallas trains with in-kernel "
-                             "SGD; --optimizer adam is not available")
+        # --optimizer adam is fine: the kernel implements Adam in-VMEM with
+        # the moment stacks resident next to the weights (multistep.py)
 
     ckpt_dir = args.ckpt_dir or f"/tmp/repro_ckpt/{cfg.name}-{backend}"
     from repro.ft.checkpoint import latest_step

@@ -80,9 +80,10 @@ class LintConfig:
     #: modules whose public entry points the SHARD rule audits
     shard_module_prefixes: tuple = ("repro/serve/", "repro/train/")
     #: files the PALLASTILE rule audits (str.endswith takes the tuple:
-    #: per-layer kernels live in kernel.py, whole-network ones in fused.py)
+    #: per-layer kernels live in kernel.py, whole-network ones in fused.py,
+    #: multi-step training launches in multistep.py)
     kernel_path_prefix: str = "repro/kernels/"
-    kernel_file_suffix: tuple = ("kernel.py", "fused.py")
+    kernel_file_suffix: tuple = ("kernel.py", "fused.py", "multistep.py")
     #: TPU tiling contract: last dim % lane, second-to-last % sublane
     lane: int = 128
     sublane: int = 8

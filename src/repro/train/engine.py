@@ -16,8 +16,9 @@ Backends
                  observer state rides in ``TrainState.aux`` so it checkpoints
                  and restores with the params (Jacob et al. 2017 QAT).
 ``fused-pallas`` the on-accelerator whole-step kernel
-                 (kernels/fused_train): forward + backprop + SGD inside one
-                 pallas_call, the paper's actual contribution.
+                 (kernels/fused_train): forward + backprop + optimizer
+                 update (in-kernel SGD or Adam, per ``cfg.optimizer``)
+                 inside one pallas_call, the paper's actual contribution.
 
 Chunked execution
 -----------------
@@ -29,7 +30,11 @@ steps inside one jitted, state-donating call, with batches synthesized
 *inside* the scan by folding the global step index into the stream key
 (``data/pipeline.batch_at`` — the same sampler the stepwise factory uses,
 so both paths draw identical batches and the seekable-by-step restart
-contract is preserved).  Per-step metrics come back stacked and are fetched
+contract is preserved).  The fused-pallas backend goes one further: a chunk
+is **one multi-step kernel launch** with weights (and Adam moments) resident
+in VMEM across all ``chunk_steps`` steps — no scan, no kernel re-entry, 2
+weight-stack HBM transfers per chunk instead of ``2*chunk_steps``
+(kernels/fused_train/multistep.py).  Per-step metrics come back stacked and are fetched
 once per chunk, asynchronously (the runner dispatches chunk N+1 before
 syncing chunk N's metrics).  Chunked is **bit-identical** to stepwise for
 every backend — same final ``TrainState``, same per-step losses — making it
@@ -49,6 +54,7 @@ import time
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 
 from repro.data.epg import default_sequence
 from repro.data.pipeline import MRFSampleStream, batch_at, make_batch_factory
@@ -86,12 +92,25 @@ class EngineConfig:
     def __post_init__(self):
         assert self.backend in BACKENDS, (self.backend, BACKENDS)
         assert self.chunk_steps >= 1, self.chunk_steps
+        if self.optimizer not in ("adam", "sgd"):
+            raise ValueError(f"optimizer must be one of ('adam', 'sgd'), got "
+                             f"{self.optimizer!r}")
         if self.backend == "fused-pallas":
-            # the kernel is a whole-step SGD update: there is no grad pytree
-            # to accumulate or compress, so these knobs would be silent lies
-            assert self.microbatches == 1 and not self.grad_compress, (
-                "fused-pallas computes the update in-kernel: microbatches/"
-                "grad_compress do not apply")
+            # the kernel computes grads AND the update in-VMEM: there is no
+            # grad pytree to accumulate or compress, so these knobs would be
+            # silent lies — refuse loudly instead of training the wrong thing
+            if self.microbatches != 1:
+                raise ValueError(
+                    f"fused-pallas computes the update in-kernel: "
+                    f"microbatches={self.microbatches} cannot be honored")
+            if self.grad_compress:
+                raise ValueError("fused-pallas computes the update in-kernel:"
+                                 " grad_compress cannot be honored")
+            if self.optimizer not in fused_ops.FUSED_OPTIMIZERS:
+                raise ValueError(
+                    f"fused-pallas implements optimizers "
+                    f"{fused_ops.FUSED_OPTIMIZERS} in-kernel, got "
+                    f"{self.optimizer!r}")
 
 
 def _backend_step(fns: ModelFns, cfg: EngineConfig, opt):
@@ -99,13 +118,15 @@ def _backend_step(fns: ModelFns, cfg: EngineConfig, opt):
     for ``cfg.backend`` — the shared core of ``build`` and ``build_chunked``,
     so stepwise and chunked run literally the same step function."""
     if cfg.backend == "fused-pallas":
-        # SGD lives inside the kernel; ``opt`` only shapes the (unused)
-        # optimizer slots so the TrainState pytree is backend-uniform.
+        # the configured rule (SGD or Adam) lives inside the kernel; ``opt``
+        # shapes the optimizer slots (incl. Adam moment stacks) so the
+        # TrainState pytree is backend-uniform — the kernel reads and writes
+        # those slots through make_engine_step's padding.
         step = make_train_step(
             None, opt,
             fused_step=fused_ops.make_engine_step(
-                lr=cfg.lr, tile_batch=cfg.tile_batch,
-                interpret=cfg.interpret))
+                lr=cfg.lr, optimizer=cfg.optimizer,
+                tile_batch=cfg.tile_batch, interpret=cfg.interpret))
         aux_of = lambda params: None
     elif cfg.backend == "qat-int8":
         step = make_train_step(
@@ -139,21 +160,57 @@ def build(fns: ModelFns, cfg: EngineConfig
     return jit_step, _make_init(fns, cfg, opt, aux_of)
 
 
+def _make_fused_chunk(cfg: EngineConfig, stream: MRFSampleStream,
+                      data_key: jax.Array):
+    """``chunk_fn(state, start, n)`` for the fused backend: ``n`` steps =
+    **one multi-step kernel launch** with weights (and Adam moments) resident
+    in VMEM across all of them (kernels/fused_train/multistep.py) — where
+    stepwise backends fold ``n`` steps into a ``lax.scan``, the fused backend
+    doesn't even re-enter the kernel.
+
+    Batches are pre-staged into one ``(n*B, ...)`` stream by the same
+    ``batch_at(stream, data_key, start + k)`` contract the scan path uses
+    (``n`` is static, so the Python staging loop traces once per chunk
+    length and the seekable-by-step restart semantics survive unchanged).
+    Per-step metrics come back as the kernel's ``(n,)`` loss trace —
+    element-identical to ``n`` stepwise fused calls.
+    """
+    def chunk_step(state: TrainState, start, n: int):
+        staged = [batch_at(stream, data_key, start + k) for k in range(n)]
+        x = jnp.concatenate([b["x"] for b in staged])
+        y = jnp.concatenate([b["y"] for b in staged])
+        new_params, new_opt, losses = fused_ops.fused_train_multistep(
+            state.params, state.opt_state, x, y, n_steps=n, lr=cfg.lr,
+            optimizer=cfg.optimizer, tile_batch=cfg.tile_batch,
+            interpret=cfg.interpret)
+        new_state = TrainState(step=state.step + n, params=new_params,
+                               opt_state=new_opt,
+                               ef_residual=state.ef_residual, aux=state.aux)
+        return new_state, {"loss": jnp.mean(losses, axis=1)}
+    return chunk_step
+
+
 def build_chunked(fns: ModelFns, cfg: EngineConfig, stream: MRFSampleStream,
                   data_key: jax.Array
                   ) -> tuple[Callable, Callable[[jax.Array], TrainState]]:
     """(jitted ``chunk_fn(state, start, n) -> (state, stacked_metrics)``,
     ``init_state``) — the chunked dispatcher for any backend.
 
-    ``n`` steps run inside one ``lax.scan``; batches are synthesized
-    on-device from ``batch_at(stream, data_key, start + i)`` so the chunk
-    draws exactly the batches the stepwise factory would.  ``n`` is static
-    (the final ragged chunk compiles once at its own length); ``start`` is a
-    traced scalar, so chunk dispatches never recompile as the run advances.
+    Stepwise backends run ``n`` steps inside one ``lax.scan``; the fused
+    backend dispatches the multi-step kernel instead (one launch, weights
+    VMEM-resident across all ``n`` steps — see ``_make_fused_chunk``).
+    Either way batches are synthesized on-device from
+    ``batch_at(stream, data_key, start + i)`` so the chunk draws exactly the
+    batches the stepwise factory would.  ``n`` is static (the final ragged
+    chunk compiles once at its own length); ``start`` is a traced scalar, so
+    chunk dispatches never recompile as the run advances.
     """
     opt = adam(cfg.lr) if cfg.optimizer == "adam" else sgd(cfg.lr)
     step, aux_of = _backend_step(fns, cfg, opt)
-    chunk = make_chunked_step(step, lambda s: batch_at(stream, data_key, s))
+    if cfg.backend == "fused-pallas":
+        chunk = _make_fused_chunk(cfg, stream, data_key)
+    else:
+        chunk = make_chunked_step(step, lambda s: batch_at(stream, data_key, s))
     jit_chunk = jax.jit(chunk, static_argnums=(2,),
                         donate_argnums=(0,) if cfg.donate else ())
     return jit_chunk, _make_init(fns, cfg, opt, aux_of)

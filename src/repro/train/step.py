@@ -20,10 +20,15 @@ through; the backend plugs in at one of two levels:
   activation observers.  ``aux`` lives in ``TrainState.aux`` so it rides
   through checkpoint/restore and buffer donation with everything else.
 * ``fused_step``: a whole-step override
-  (``(params, aux, batch) -> (new_params, new_aux, metrics)``) for updates
-  computed *on the accelerator* (kernels/fused_train), where grads never
-  materialise in HBM.  The factory wraps it into the same
-  ``(state, batch) -> (state, metrics)`` contract.
+  (``(params, opt_state, aux, batch) -> (new_params, new_opt_state,
+  new_aux, metrics)``) for updates computed *on the accelerator*
+  (kernels/fused_train), where grads never materialise in HBM and the
+  optimizer rule — including Adam's moment state — runs inside the kernel.
+  The factory wraps it into the same ``(state, batch) -> (state, metrics)``
+  contract, and **refuses** knobs the fused path cannot honor
+  (``microbatches > 1``, ``grad_compress``): there is no grad pytree to
+  accumulate or compress, so accepting them would train a silently
+  different objective.
 
 Every step the factory returns is *scan-compatible*: the whole
 ``TrainState`` — including the backend ``aux`` (QAT observers) — is the
@@ -75,11 +80,22 @@ def make_train_step(loss_fn, opt: Optimizer, *, microbatches: int = 1,
     grads+apply pipeline (see module docstring); ``loss_fn`` may be None then.
     """
     if fused_step is not None:
+        if microbatches != 1:
+            raise ValueError(
+                f"fused_step computes grads+update in-kernel: there is no "
+                f"grad pytree to accumulate, so microbatches={microbatches} "
+                f"cannot be honored (use a stepwise backend)")
+        if grad_compress:
+            raise ValueError(
+                "fused_step computes grads+update in-kernel: there is no "
+                "grad pytree to compress, so grad_compress cannot be honored "
+                "(use a stepwise backend)")
+
         def train_step(state: TrainState, batch):  # jaxlint: disable=SHARD -- fused_step owns placement: the Pallas path is single-core by design
-            new_params, new_aux, metrics = fused_step(state.params, state.aux,
-                                                      batch)
+            new_params, new_opt, new_aux, metrics = fused_step(
+                state.params, state.opt_state, state.aux, batch)
             new_state = TrainState(step=state.step + 1, params=new_params,
-                                   opt_state=state.opt_state,
+                                   opt_state=new_opt,
                                    ef_residual=state.ef_residual, aux=new_aux)
             return new_state, metrics
         return train_step

@@ -24,7 +24,10 @@ from repro.train import engine
 
 jax.config.update("jax_platform_name", "cpu")
 
-BACKENDS = ("float", "qat-int8", "fused-pallas")
+# "fused-pallas-adam" is the fused backend with the in-kernel Adam rule —
+# a distinct bit-exactness surface (moment stacks + traced-step bias
+# correction ride through the multi-step kernel and the ckpt/restart path)
+BACKENDS = ("float", "qat-int8", "fused-pallas", "fused-pallas-adam")
 
 
 def _tree_equal(a, b):
@@ -35,9 +38,12 @@ def _tree_equal(a, b):
 
 
 def _engine_cfg(backend, chunk_steps):
+    if backend == "fused-pallas-adam":
+        backend, optimizer = "fused-pallas", "adam"
+    else:
+        optimizer = "sgd" if backend == "fused-pallas" else "adam"
     return engine.EngineConfig(
-        backend=backend, lr=1e-3, max_grad_norm=None,
-        optimizer="sgd" if backend == "fused-pallas" else "adam",
+        backend=backend, lr=1e-3, max_grad_norm=None, optimizer=optimizer,
         chunk_steps=chunk_steps)
 
 

@@ -6,7 +6,10 @@ committed, failing collection of the whole suite.
 """
 
 import pathlib
+import subprocess
 import textwrap
+
+import pytest
 
 from repro.tools.import_integrity import find_missing_imports
 
@@ -15,6 +18,29 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 def test_all_repro_imports_resolve():
     assert find_missing_imports(REPO_ROOT) == []
+
+
+def test_no_tracked_bytecode():
+    """Compiled bytecode must never be committed: it bloats diffs, goes
+    stale silently, and once slipped a whole ``__pycache__`` tree into a PR.
+    ``.gitignore`` keeps new ones out; this guards the index itself."""
+    try:
+        res = subprocess.run(["git", "ls-files"], cwd=REPO_ROOT,
+                             capture_output=True, text=True, timeout=60)
+    except (OSError, subprocess.TimeoutExpired):
+        pytest.skip("git unavailable")
+    if res.returncode != 0:
+        pytest.skip("not a git checkout")
+    tracked = res.stdout.splitlines()
+    offenders = [f for f in tracked
+                 if f.endswith(".pyc") or "__pycache__" in f.split("/")]
+    assert offenders == [], (
+        f"tracked bytecode files (git rm --cached them): {offenders[:10]}")
+    gitignore = REPO_ROOT / ".gitignore"
+    assert gitignore.exists() and ".gitignore" in tracked
+    rules = gitignore.read_text().splitlines()
+    for required in ("__pycache__/", "*.pyc", ".jaxlint-cache.json"):
+        assert required in rules, f".gitignore is missing {required!r}"
 
 
 def test_checker_flags_missing_module(tmp_path):

@@ -104,6 +104,50 @@ def test_rules_are_path_scoped():
         assert lint_fixture(name, other) == []
 
 
+def test_pallastile_covers_multistep_kernel_files():
+    """The multi-step training kernels live in multistep.py — the rule must
+    audit that suffix like kernel.py/fused.py (and stay path-scoped)."""
+    src = ("from jax.experimental import pallas as pl\n"
+           "spec = pl.BlockSpec((8, 100), lambda i: (i, 0))\n")
+    findings = lint_source(src, "src/repro/kernels/fused_train/multistep.py")
+    assert [f.rule for f in findings] == ["PALLASTILE"]
+    # same name outside the kernels tree stays out of the rule's domain
+    assert lint_source(src, "src/repro/train/multistep.py") == []
+
+
+_MOMENT_SCRATCH_CALL = """
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+L = 90  # 90*128*128*4B = 5.6 MiB per stack
+
+def launch(kern, x):
+    return pl.pallas_call(
+        kern,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((L, 128, 128), jnp.float32),   # weights
+{moments}        ],
+    )(x)
+"""
+
+
+def test_pallastile_vmem_estimate_counts_moment_scratch():
+    """The in-kernel Adam rides mu/nu stacks as extra VMEM scratch: the
+    VMEM estimate must include them — weights alone fit the budget, weights
+    + both moment stacks do not."""
+    path = "src/repro/kernels/fused_train/multistep.py"
+    moments = ("            pltpu.VMEM((L, 128, 128), jnp.float32),   # mu\n"
+               "            pltpu.VMEM((L, 128, 128), jnp.float32),   # nu\n")
+    over = lint_source(_MOMENT_SCRATCH_CALL.format(moments=moments), path)
+    assert [f.rule for f in over] == ["PALLASTILE"]
+    assert "VMEM footprint" in over[0].message
+    assert lint_source(_MOMENT_SCRATCH_CALL.format(moments=""), path) == []
+
+
 # --- pragmas ---------------------------------------------------------------
 
 def test_reasoned_pragma_suppresses():

@@ -143,8 +143,8 @@ def test_fused_engine_step_matches_float_reference():
     lr = 2e-2
 
     fused_fn, fused_init = engine.build(fns, engine.EngineConfig(
-        backend="fused-pallas", lr=lr, tile_batch=128, interpret=True,
-        donate=False))
+        backend="fused-pallas", lr=lr, optimizer="sgd", tile_batch=128,
+        interpret=True, donate=False))
     float_fn, float_init = engine.build(fns, engine.EngineConfig(
         backend="float", lr=lr, optimizer="sgd", max_grad_norm=None,
         donate=False))
@@ -155,6 +155,58 @@ def test_fused_engine_step_matches_float_reference():
     assert int(state_k.step) == int(state_r.step) == 1
 
 
+def test_fused_engine_adam_step_matches_float_reference():
+    """One fused-pallas engine step with optimizer='adam' (tile_batch=128 ->
+    a single tile = one Adam update on the full minibatch) must match the
+    float backend's Adam step: params, both moment stacks, and the step
+    counter — the in-kernel Adam is the same rule, just resident in VMEM."""
+    cfg = get_smoke("mrf-fpga")
+    fns = registry.build(cfg)
+    key = jax.random.PRNGKey(0)
+    stream = MRFSampleStream(seq=default_sequence(cfg.mrf_n_frames),
+                             batch_size=128)
+    x, y = sample_batch(stream, jax.random.PRNGKey(7))
+    batch = {"x": x, "y": y}
+    lr = 1e-3
+
+    fused_fn, fused_init = engine.build(fns, engine.EngineConfig(
+        backend="fused-pallas", lr=lr, optimizer="adam", tile_batch=128,
+        interpret=True, donate=False))
+    float_fn, float_init = engine.build(fns, engine.EngineConfig(
+        backend="float", lr=lr, optimizer="adam", max_grad_norm=None,
+        donate=False))
+
+    state_k, _ = fused_fn(fused_init(key), batch)
+    state_r, _ = float_fn(float_init(key), batch)
+    _params_equal(state_k.params, state_r.params, atol=1e-5)
+    _params_equal(state_k.opt_state.mu, state_r.opt_state.mu, atol=1e-5)
+    _params_equal(state_k.opt_state.nu, state_r.opt_state.nu, atol=1e-7)
+    assert int(state_k.opt_state.step) == int(state_r.opt_state.step) == 1
+    assert int(state_k.step) == 1
+
+
+def test_engine_rejects_configs_fused_cannot_honor():
+    """The fused path computes grads+update in-kernel: configs it cannot
+    honor must fail loudly at build time, never train the wrong rule."""
+    from repro.kernels.fused_train.ops import make_engine_step
+    from repro.train.step import make_train_step
+
+    with pytest.raises(ValueError, match="microbatches"):
+        engine.EngineConfig(backend="fused-pallas", microbatches=2)
+    with pytest.raises(ValueError, match="grad_compress"):
+        engine.EngineConfig(backend="fused-pallas", grad_compress=True)
+    with pytest.raises(ValueError, match="optimizer"):
+        engine.EngineConfig(optimizer="rmsprop")  # any backend: whitelist
+    with pytest.raises(ValueError, match="sgd"):
+        make_engine_step(lr=1e-2, optimizer="rmsprop")
+
+    fused = lambda p, o, a, b: (p, o, a, {})
+    with pytest.raises(ValueError, match="microbatches"):
+        make_train_step(None, sgd(1e-2), fused_step=fused, microbatches=4)
+    with pytest.raises(ValueError, match="compress"):
+        make_train_step(None, sgd(1e-2), fused_step=fused, grad_compress=True)
+
+
 def test_fused_tile_adapts_to_awkward_batch():
     """tile_batch is a ceiling: a batch not divisible by it must still run
     (largest dividing tile), not crash on the kernel grid assert."""
@@ -162,17 +214,31 @@ def test_fused_tile_adapts_to_awkward_batch():
     assert effective_tile(192, 128) == 96
     assert effective_tile(100, 128) == 100
     assert effective_tile(7, 4) == 1
+    # degradation on prime/awkward sizes: fall back toward per-sample tiles
+    assert effective_tile(13, 8) == 1       # prime above the ceiling
+    assert effective_tile(97, 128) == 97    # prime under the ceiling: 1 tile
+    assert effective_tile(254, 128) == 127  # 2*127 -> the big prime factor
+    assert effective_tile(96, 36) == 32     # largest divisor <= ceiling
     cfg = get_smoke("mrf-fpga")
     fns = registry.build(cfg)
     stream = MRFSampleStream(seq=default_sequence(cfg.mrf_n_frames),
                              batch_size=24)
     x, y = sample_batch(stream, jax.random.PRNGKey(11))
     step_fn, init_state = engine.build(fns, engine.EngineConfig(
-        backend="fused-pallas", lr=1e-2, tile_batch=16, donate=False))
+        backend="fused-pallas", lr=1e-2, optimizer="sgd", tile_batch=16,
+        donate=False))
     new_state, metrics = step_fn(init_state(jax.random.PRNGKey(0)),
                                  {"x": x, "y": y})
     assert np.isfinite(float(metrics["loss"]))
     assert int(new_state.step) == 1
+    # prime batch: degrades all the way to per-sample streaming and still runs
+    stream_p = MRFSampleStream(seq=default_sequence(cfg.mrf_n_frames),
+                               batch_size=13)
+    xp, yp = sample_batch(stream_p, jax.random.PRNGKey(12))
+    state_p, metrics_p = step_fn(init_state(jax.random.PRNGKey(0)),
+                                 {"x": xp, "y": yp})
+    assert np.isfinite(float(metrics_p["loss"]))
+    assert int(state_p.step) == 1
 
 
 def test_fused_multi_tile_is_sequential_sgd():
@@ -187,7 +253,8 @@ def test_fused_multi_tile_is_sequential_sgd():
     lr = 1e-2
 
     step_fn, init_state = engine.build(fns, engine.EngineConfig(
-        backend="fused-pallas", lr=lr, tile_batch=16, donate=False))
+        backend="fused-pallas", lr=lr, optimizer="sgd", tile_batch=16,
+        donate=False))
     new_state, _ = step_fn(init_state(jax.random.PRNGKey(0)), {"x": x, "y": y})
 
     opt = sgd(lr)
