@@ -21,6 +21,15 @@ samples are **interleaved** across all four (backend, mode) engines — one
 drain each per repetition, medians per engine — so machine-load drift
 spreads evenly instead of biasing whichever engine ran last.
 
+The **saturation sweep** closes the overload story: real-time-paced
+request arrivals at multiples of the measured pipelined capacity, served
+through an admission-policied engine with an injected kernel failure on
+the first measured wave (the circuit breaker trips and the rest of the
+sweep serves through the bit-exact lax fallback).  Per offered-load level
+it records p99 latency from enqueue, the shed rate, and the fraction of
+waves served degraded; a no-admission 2x level rides along so the JSON
+shows what shedding buys (bounded p99 vs queue collapse).
+
 Writes machine-readable ``BENCH_mrf_serve.json`` (regenerated in place;
 commit it to record a perf data point) besides the CSV rows run.py prints.
 
@@ -33,6 +42,7 @@ from __future__ import annotations
 import json
 import pathlib
 import statistics
+import time
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +50,10 @@ import jax.numpy as jnp
 from benchmarks import serve_autotune
 from repro.configs import get_config
 from repro.core import mrf_net, qat
+from repro.serve.admission import AdmissionPolicy
 from repro.serve.executor import WaveExecutor
+from repro.serve.faults import FaultInjector, FaultSpec
+from repro.serve.queue import RequestState
 from repro.serve.recon import ReconEngine, ReconRequest, latency_percentiles
 
 OUT_PATH = pathlib.Path("BENCH_mrf_serve.json")
@@ -52,6 +65,13 @@ REQUEST_VOXELS = (700, 1024, 333, 96, 2048, 1500, 811, 64)
 # waves per drain, so pipelined double-buffering actually has waves to
 # overlap (one monolithic wave would make the modes trivially identical)
 MAX_WAVE_VOXELS = 2048
+
+# saturation sweep: (label, offered load as a multiple of measured
+# capacity, admission policy on?)
+SATURATION_LEVELS = (("0.5x", 0.5, True), ("1x", 1.0, True),
+                     ("2x", 2.0, True), ("2x_no_admission", 2.0, False))
+SAT_DURATION_S = 1.0
+SAT_BUDGET_VOXELS = 4 * MAX_WAVE_VOXELS  # admission pending-voxel budget
 
 
 def _calibrated_net(cfg, seed: int = 0):
@@ -89,6 +109,61 @@ def _bench_mode(engine: ReconEngine, requests, waves: int) -> dict:
             "requests": len(results), "voxels": int(voxels),
             "waves_per_drain": engine.last_wave["n_waves"],
             "buckets_traced": engine.compile_cache_size()}
+
+
+def _saturation_level(ints, buckets, requests, offered_vps, *,
+                      admission: bool,
+                      duration_s: float = SAT_DURATION_S) -> dict:
+    """Serve ``duration_s`` of real-time-paced arrivals at ``offered_vps``
+    voxels/s through a fresh overload-hardened engine; returns the level's
+    ledger (latency, shed rate, degraded-wave fraction).
+
+    An injected kernel failure on wave 0 trips the fused->lax circuit
+    breaker during warmup, so the warmup drain also compiles the degraded
+    buckets and *every measured wave* serves degraded (bit-exact by the
+    PR 7 parity proof) — the sweep measures overload behaviour *through*
+    the fault, with the breaker's one-time recompile cost paid outside the
+    timed window.
+    """
+    eng = ReconEngine(
+        backend="int8", int_layers=ints, int8_impl="fused",
+        mode="pipelined", buckets=buckets,
+        max_wave_voxels=MAX_WAVE_VOXELS, max_wait_ms=5.0,
+        admission=(AdmissionPolicy(max_pending_voxels=SAT_BUDGET_VOXELS)
+                   if admission else None),
+        injector=FaultInjector([FaultSpec(kind="kernel_fail", wave=0)]))
+    eng.reconstruct(requests)  # warmup: trips the breaker, traces buckets
+    warm_degraded = eng.executor.n_degraded_waves
+    tickets = []
+    sent = i = 0
+    t0 = time.perf_counter()
+    while True:
+        elapsed = time.perf_counter() - t0
+        if elapsed >= duration_s:
+            break
+        # arrival pacing: keep cumulative offered voxels on the target line
+        while sent < offered_vps * elapsed:
+            r = requests[i % len(requests)]
+            tickets.append(eng.enqueue(r))
+            sent += r.n_voxels
+            i += 1
+        eng.poll()
+    eng.drain()
+    done = [t for t in tickets if t.state == RequestState.DONE]
+    shed = [t for t in tickets if t.state == RequestState.SHED]
+    pct = latency_percentiles([t.result for t in done])
+    lw = eng.last_wave
+    return {"offered_voxels_per_s": offered_vps,
+            "admission": admission,
+            "submitted": len(tickets), "done": len(done),
+            "shed": len(shed),
+            "failed": len(tickets) - len(done) - len(shed),
+            "shed_rate": len(shed) / max(len(tickets), 1),
+            "degraded_wave_frac": (
+                (eng.executor.n_degraded_waves - warm_degraded)
+                / max(lw["n_waves"], 1)),
+            "p50_ms": pct["p50_ms"], "p99_ms": pct["p99_ms"],
+            "served_voxels_per_s": lw["voxels_per_s"]}
 
 
 def _tuned_buckets(ints, requests, reps: int) -> dict:
@@ -198,6 +273,26 @@ def run(waves: int = 5, reps: int = 5, out_path=OUT_PATH):
     rows.append(("mrf_serve/int8_before_layered", 0.0,
                  f"voxels/s={before['voxels_per_s']:.0f} after/before="
                  f"{record['int8_before_layered']['speedup_after_vs_before']:.1f}x"))
+
+    # saturation sweep: offered load vs p99 / shed rate / degraded fraction
+    capacity = record["backends"]["int8"]["pipelined"]["voxels_per_s"]
+    sat = {"capacity_voxels_per_s": capacity,
+           "budget_voxels": SAT_BUDGET_VOXELS,
+           "duration_s": SAT_DURATION_S,
+           "note": ("fused int8 engine; an injected kernel_fail at wave 0 "
+                    "trips the circuit breaker during warmup, so every "
+                    "measured wave serves degraded (lax, bit-exact) — "
+                    "degraded_wave_frac records it"),
+           "levels": {}}
+    for name, mult, adm in SATURATION_LEVELS:
+        lvl = _saturation_level(ints, buckets, requests, capacity * mult,
+                                admission=adm)
+        sat["levels"][name] = lvl
+        rows.append((f"mrf_serve/saturation/{name}", lvl["p99_ms"] * 1e3,
+                     f"shed={lvl['shed_rate']:.0%} degraded="
+                     f"{lvl['degraded_wave_frac']:.0%} "
+                     f"served={lvl['served_voxels_per_s']:.0f}vox/s"))
+    record["saturation"] = sat
 
     pathlib.Path(out_path).write_text(json.dumps(record, indent=1))
     rows.append(("mrf_serve/json", 0.0, f"wrote {out_path}"))

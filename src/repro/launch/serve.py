@@ -13,6 +13,16 @@ oracle bit-for-bit.  ``--serve-mode pipelined`` serves the same trace
 through the double-buffered executor (``--max-wave-voxels`` /
 ``--max-wait-ms`` control wave formation) and additionally asserts the
 pipelined maps are bit-identical to sync serving.
+
+Chaos smoke: ``--fault-schedule`` (a ``serve.faults`` JSON schedule)
+and/or the admission knobs (``--max-pending-voxels``,
+``--shed-deadline-ms``) switch the MRF family into the overload/fault
+accounting path — enqueue everything, drain through the injected faults,
+then assert every ticket landed in exactly one terminal state
+(done/failed/shed) and that every served map is bit-identical to healthy
+serving.  ``--expect-shed`` / ``--expect-degraded`` make the smoke fail
+unless load shedding / the fused->lax circuit breaker actually engaged,
+so CI proves the machinery fired rather than trivially passing.
 """
 
 from __future__ import annotations
@@ -112,6 +122,68 @@ def _obtain_int8_artifact(args, cfg):
     return loaded
 
 
+def _chaos_serve(args, engine, net_kw, requests) -> int:
+    """Overload/fault accounting path: enqueue everything, drain through
+    the injected schedule, then audit the lifecycle ledger.
+
+    Enqueue-all-then-drain (not enqueue/poll interleaved) on purpose: the
+    pending backlog builds before any wave retires, so admission-policy
+    shedding is deterministic — the same requests shed every run, which is
+    what a CI gate needs.
+    """
+    import collections
+
+    from repro.serve.queue import RequestState
+    from repro.serve.recon import ReconEngine
+
+    tickets = [engine.enqueue(r) for r in requests]
+    engine.drain()
+    stats, health = engine.last_wave, engine.health()
+    states = collections.Counter(t.state for t in tickets)
+    print(f"chaos drain: done={states['done']} failed={states['failed']} "
+          f"shed={states['shed']} waves={stats['n_waves']} "
+          f"retries={stats['n_retries']} slow={health['n_slow_waves']} "
+          f"degraded={health['degraded']}")
+    for t in tickets:
+        if t.state == RequestState.SHED:
+            print(f"  shed   {t.request.request_id}: {t.shed_reason}")
+        elif t.state == RequestState.FAILED:
+            print(f"  failed {t.request.request_id}: {t.error}")
+    bad = [t for t in tickets if t.state not in RequestState.TERMINAL]
+    if bad:
+        print(f"FAIL: {len(bad)} ticket(s) stranded non-terminal: "
+              f"{[t.state for t in bad]}")
+        return 1
+    done = [t for t in tickets if t.state == RequestState.DONE]
+    if not done:
+        print("FAIL: chaos schedule starved the drain — nothing served")
+        return 1
+    # every served map must be bit-identical to healthy (fault-free)
+    # serving; the reference runs whatever impl the engine ended on (the
+    # degraded lax impl is bit-exact vs fused by the PR 7 parity proof)
+    ref_kw = dict(net_kw)
+    if ref_kw.get("backend") == "int8":
+        ref_kw["int8_impl"] = engine.int8_impl
+    ref = ReconEngine(**ref_kw)
+    for t in done:
+        want, = ref.reconstruct([t.request])
+        if not (np.array_equal(t.result.t1_ms, want.t1_ms)
+                and np.array_equal(t.result.t2_ms, want.t2_ms)):
+            print(f"FAIL: served maps diverge from healthy serving "
+                  f"({t.request.request_id})")
+            return 1
+    print(f"served maps == healthy serving: bit-exact ({len(done)} requests)")
+    if args.expect_shed and states["shed"] == 0:
+        print("FAIL: --expect-shed but the admission policy shed nothing")
+        return 1
+    if args.expect_degraded and not health["degraded"]:
+        print("FAIL: --expect-degraded but the circuit breaker never "
+              "tripped")
+        return 1
+    print("chaos smoke: clean drain, every ticket terminal")
+    return 0
+
+
 def run_mrf_serve(args, cfg) -> int:
     """The MRF reconstruction family through the batched serving engine."""
     from repro.core import qat
@@ -141,9 +213,26 @@ def run_mrf_serve(args, cfg) -> int:
                              "implementation; it requires --backend int8")
         params, _, _ = _train_mrf(args, cfg, qat_mode=False)
         net_kw = dict(backend="float", params=params)
+
+    injector = admission = None
+    if args.fault_schedule:
+        import json
+
+        from repro.serve.faults import FaultInjector
+        injector = FaultInjector(json.loads(args.fault_schedule))
+    if args.max_pending_voxels is not None or \
+            args.shed_deadline_ms is not None:
+        from repro.serve.admission import AdmissionPolicy
+        admission = AdmissionPolicy(max_pending_voxels=args.max_pending_voxels,
+                                    deadline_ms=args.shed_deadline_ms)
     engine = ReconEngine(mode=args.serve_mode,
                          max_wave_voxels=args.max_wave_voxels,
-                         max_wait_ms=args.max_wait_ms, **net_kw)
+                         max_wait_ms=args.max_wait_ms,
+                         admission=admission, injector=injector,
+                         adaptive=args.adaptive,
+                         wave_timeout_s=(args.wave_timeout_ms * 1e-3
+                                         if args.wave_timeout_ms is not None
+                                         else None), **net_kw)
     if backend == "int8":
         print(f"int8 impl: {engine.int8_impl} "
               f"(requested {args.int8_impl})")
@@ -158,6 +247,11 @@ def run_mrf_serve(args, cfg) -> int:
                                    key=jax.random.PRNGKey(i))
         requests.append(ReconRequest(features=feats, mask=msk,
                                      request_id=f"slice-{i}"))
+
+    if injector is not None or admission is not None:
+        # no warmup wave: it would consume fault-schedule wave indices and
+        # pre-feed the admission service rate
+        return _chaos_serve(args, engine, net_kw, requests)
 
     engine.reconstruct(requests)  # warmup wave (compiles buckets)
     if args.serve_mode == "pipelined":
@@ -246,6 +340,28 @@ def main(argv=None):
     ap.add_argument("--max-wait-ms", type=float, default=None,
                     help="mrf: admission deadline from enqueue before a "
                          "wave is due (default: no deadline trigger)")
+    ap.add_argument("--fault-schedule", default=None,
+                    help="mrf chaos: JSON list of serve.faults FaultSpec "
+                         'dicts, e.g. \'[{"kind": "kernel_fail", '
+                         '"wave": 0}]\' — switches to the chaos '
+                         "accounting path")
+    ap.add_argument("--max-pending-voxels", type=int, default=None,
+                    help="mrf chaos: admission budget — shed arrivals that "
+                         "would push the pending backlog past this")
+    ap.add_argument("--shed-deadline-ms", type=float, default=None,
+                    help="mrf chaos: shed arrivals whose estimated queue "
+                         "wait exceeds this deadline")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="mrf: auto-tune inflight depth + wave cap from "
+                         "observed staging/compute (pipelined mode only)")
+    ap.add_argument("--wave-timeout-ms", type=float, default=None,
+                    help="mrf: flag waves whose completion wait exceeds "
+                         "this as stalls (health accounting)")
+    ap.add_argument("--expect-shed", action="store_true",
+                    help="mrf chaos: fail unless load shedding engaged")
+    ap.add_argument("--expect-degraded", action="store_true",
+                    help="mrf chaos: fail unless the int8 circuit breaker "
+                         "tripped to the lax impl")
     ap.add_argument("--artifact", default=None,
                     help="mrf int8: serve this .npz artifact instead of "
                          "training one")

@@ -1,5 +1,9 @@
+from repro.serve.admission import (AdaptiveController, AdmissionPolicy,
+                                   ShedReason)
 from repro.serve.decode import make_serve_step, make_prefill_step
 from repro.serve.executor import InflightWave, WaveExecutor
+from repro.serve.faults import (FAULT_KINDS, FaultInjector, FaultSpec,
+                                InjectedServeFault, WaveTimeout)
 from repro.serve.queue import QueuedRequest, RequestQueue, RequestState
 from repro.serve.recon import (ReconEngine, ReconRequest, ReconResult,
                                latency_percentiles, plan_tiles)

@@ -35,6 +35,20 @@ data-parallel; build it inside ``use_rules(...)`` — ambient rules are
 captured at first trace of each bucket shape.  Float and int8 backends run
 the exact arithmetic the monolithic engine ran, so pipelined serving is
 bit-identical to sync serving.
+
+Graceful degradation
+--------------------
+The int8 fused whole-network kernel is the TPU deployment path — and the
+component most likely to break first on a driver/runtime regression.  The
+executor carries a **circuit breaker**: when the fused forward raises (at
+tile enqueue here, or asynchronously at the wave wait — the engine reports
+those via :meth:`note_kernel_failure`), ``breaker_threshold`` failures trip
+the breaker and the executor rebuilds its forward on the pure-lax int8
+impl.  PR 7's parity proof makes that fallback **bit-exact**, so degraded
+waves serve identical maps at reduced throughput instead of serving
+nothing; ``degraded`` / ``degraded_reason`` / ``n_degraded_waves`` record
+the event for health reporting.  Fault schedules (``serve.faults``) can
+fire a ``kernel_fail`` here deterministically to test the breaker.
 """
 
 from __future__ import annotations
@@ -147,7 +161,8 @@ class WaveExecutor:
     def __init__(self, *, backend: str = "float", params=None, int_layers=None,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  interpret: bool | None = None, int8_impl: str | None = None,
-                 int8_block_m: int | None = None):
+                 int8_block_m: int | None = None, injector=None,
+                 breaker_threshold: int = 1):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
         if backend == "float" and params is None:
@@ -174,6 +189,17 @@ class WaveExecutor:
         # recorded request-size distribution (voxel counts of every request
         # dispatched) — the input to measured bucket autotuning
         self.request_sizes: list = []
+        # fault injection + the fused->lax circuit breaker (see module doc)
+        if breaker_threshold < 1:
+            raise ValueError(f"breaker_threshold must be >= 1, "
+                             f"got {breaker_threshold}")
+        self._injector = injector
+        self.breaker_threshold = breaker_threshold
+        self.degraded = False
+        self.degraded_reason: str | None = None
+        self.n_kernel_failures = 0
+        self.n_degraded_waves = 0
+        self._wave_seq = 0  # fallback wave numbering for direct callers
 
     def _make_forward(self):
         # denormalization stays centralized in data.pipeline
@@ -246,17 +272,65 @@ class WaveExecutor:
             pool = jnp.zeros((0, self.in_dim), jnp.float32)
         return pool, tiles, total
 
-    def dispatch(self, features_list: Sequence) -> InflightWave:  # jaxlint: disable=SHARD -- sharding happens in self._fwd (the _make_forward closures), a stored callable the resolver cannot follow
+    # -- degradation (the circuit breaker) ---------------------------------
+
+    def can_degrade(self) -> bool:
+        """True while a fallback impl exists for this executor's forward
+        (the fused int8 kernel degrades to the bit-exact lax impl)."""
+        return (self.backend == "int8" and self.int8_impl == "fused"
+                and not self.degraded)
+
+    def note_kernel_failure(self) -> bool:
+        """Record one forward failure; trips the breaker onto the lax
+        fallback once ``breaker_threshold`` failures accumulate and a
+        fallback exists.  Returns True iff the executor is (now) degraded.
+
+        Called internally when a tile enqueue raises, and by the engine
+        when a wave's *wait* raises (jax dispatch is async, so a kernel
+        failure can surface at either point).
+        """
+        self.n_kernel_failures += 1
+        if (self.can_degrade()
+                and self.n_kernel_failures >= self.breaker_threshold):
+            self.degraded = True
+            self.degraded_reason = (
+                f"int8 fused kernel failed {self.n_kernel_failures}x; "
+                f"circuit breaker tripped to the lax impl (bit-exact by "
+                f"the PR 7 parity proof)")
+            self.int8_impl = "lax"
+            self._fwd = self._make_forward()
+        return self.degraded
+
+    def dispatch(self, features_list: Sequence, *,  # jaxlint: disable=SHARD -- sharding happens in self._fwd (the _make_forward closures), a stored callable the resolver cannot follow
+                 wave_index: int | None = None) -> InflightWave:
         """Stage one wave and enqueue all its tiles; never blocks.
 
         The returned handle's outputs are device futures: call ``wait()``
         (pipelined, one sync) or iterate ``wait_tiles()`` (sync baseline).
+        ``wave_index`` labels the wave for fault schedules (the engine
+        passes its dispatch sequence number; direct callers get an
+        internal counter).  A forward that raises at enqueue feeds the
+        circuit breaker: if a bit-exact fallback exists the failing tile
+        is re-enqueued degraded and the wave still completes.
         """
         pool, tiles, total = self.stage(features_list)
+        widx = self._wave_seq if wave_index is None else wave_index
+        self._wave_seq = widx + 1
         outputs = []
         for off, _count, bucket in tiles:
             # only the trailing tile is padded, so pool offsets == voxel
             # offsets and every slice is a static (bucket, in_dim) view
-            outputs.append(self._fwd(pool[off:off + bucket]))
+            tile = pool[off:off + bucket]
+            try:
+                if self._injector is not None:
+                    self._injector.fire_kernel(widx)
+                out = self._fwd(tile)
+            except Exception:
+                if not self.note_kernel_failure():
+                    raise  # no fallback (float / already-lax): engine retries
+                out = self._fwd(tile)  # degraded forward, bit-exact maps
+            outputs.append(out)
             self.bucket_shapes_run.add(bucket)
+        if self.degraded:
+            self.n_degraded_waves += 1
         return InflightWave(tiles=tiles, outputs=outputs, total=total)

@@ -28,6 +28,33 @@ three-layer stack; this module is the top:
   their maps are bit-identical.  ``reconstruct(requests)`` is the
   compatibility wrapper: validate everything, enqueue everything, drain.
 
+Robustness layer
+----------------
+The engine is overload- and fault-hardened end to end:
+
+* **Admission control** — pass ``admission=AdmissionPolicy(...)`` and the
+  queue sheds (never queues-to-collapse) under load: bounded pending-voxel
+  budget, deadline-aware rejection against the observed service rate (the
+  engine feeds ``observe_service`` at every wave retire), priority
+  displacement.  Shed tickets end in the distinct ``shed`` terminal state
+  with a structured ``ShedReason``.
+* **Bounded retry, solo blast radius** — a wave that crashes at dispatch
+  or execution no longer fails every wave-mate: tickets with retry budget
+  left (``max_retries``, default 1) are requeued as *solo* waves (each
+  retries alone, optionally after ``retry_backoff_s * 2**(retries-1)`` of
+  backoff), so a transient blip costs a retry and only a genuinely
+  poisoned request exhausts its budget and fails — alone.
+* **Degradation** — execution failures feed the executor's circuit
+  breaker; once it trips, retried and subsequent waves serve through the
+  bit-exact lax int8 fallback (``engine.health()["degraded"]``).
+* **Watchdog + adaptive pipelining** — each wave's staging and compute
+  times are measured; ``wave_timeout_s`` flags stalls, and with
+  ``adaptive=True`` an ``AdaptiveController`` (EWMA-driven, clamped)
+  auto-tunes ``inflight_depth`` and the wave voxel cap live.
+* **Fault injection** — ``injector=FaultInjector(schedule)`` fires
+  deterministic faults (``serve.faults``) at every lifecycle point, the
+  serving twin of ``ft/runner``'s ``inject_fault_at``.
+
 Per-voxel predictions are denormalised in exactly one place
 (``data.pipeline.denormalize_targets``, fused on-device inside the
 executor's jitted forward) and scattered back into map-shaped arrays
@@ -45,8 +72,10 @@ from typing import Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.admission import AdaptiveController
 from repro.serve.executor import (BACKENDS, DEFAULT_BUCKETS, WaveExecutor,
                                   plan_tiles)
+from repro.serve.faults import WaveTimeout
 from repro.serve.queue import QueuedRequest, RequestQueue, RequestState
 
 __all__ = ["BACKENDS", "DEFAULT_BUCKETS", "MODES", "ReconEngine",
@@ -112,6 +141,18 @@ class ReconEngine:
     for the rig; see :class:`WaveExecutor`).  Defaults (no cap, no
     deadline, sync) make :meth:`reconstruct` behave exactly like the
     pre-queue engine.
+
+    Robustness knobs: ``admission`` installs a load-shedding policy
+    (``serve.admission.AdmissionPolicy``); ``max_retries`` bounds the solo
+    requeues a ticket gets after a failed wave (0 restores fail-the-wave);
+    ``retry_backoff_s`` sleeps ``retry_backoff_s * 2**(retries-1)`` before
+    a retry wave dispatches (0 = immediate); ``wave_timeout_s`` flags waves
+    whose completion wait exceeds it as stalls (health accounting + the
+    adaptive controller's shrink signal); ``adaptive=True`` (or a
+    configured ``AdaptiveController``) auto-tunes ``inflight_depth`` and
+    ``max_wave_voxels`` live — pipelined mode only; ``injector`` threads a
+    deterministic ``serve.faults.FaultInjector`` through every lifecycle
+    point.
     """
 
     def __init__(self, *, backend: str = "float", params=None, int_layers=None,
@@ -120,39 +161,76 @@ class ReconEngine:
                  max_wave_voxels: int | None = None,
                  max_wait_ms: float | None = None, inflight_depth: int = 2,
                  int8_impl: str | None = None, int8_block_m: int | None = None,
-                 clock=time.perf_counter):
+                 admission=None, injector=None, max_retries: int = 1,
+                 retry_backoff_s: float = 0.0,
+                 wave_timeout_s: float | None = None,
+                 adaptive=False, clock=time.perf_counter):
         if mode not in MODES:
             raise ValueError(f"mode {mode!r} not in {MODES}")
         if inflight_depth < 1:
             raise ValueError(f"inflight_depth must be >= 1: {inflight_depth}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0: {max_retries}")
+        if retry_backoff_s < 0:
+            raise ValueError(f"retry_backoff_s must be >= 0: "
+                             f"{retry_backoff_s}")
         self.mode = mode
         self.executor = WaveExecutor(backend=backend, params=params,
                                      int_layers=int_layers, buckets=buckets,
                                      interpret=interpret, int8_impl=int8_impl,
-                                     int8_block_m=int8_block_m)
+                                     int8_block_m=int8_block_m,
+                                     injector=injector)
         # one time source for enqueue stamps AND completion stamps, so an
         # injected test clock yields coherent latencies
         self._clock = clock
+        self.admission = admission
         self.queue = RequestQueue(max_wave_voxels=max_wave_voxels,
                                   max_wait_ms=max_wait_ms,
-                                  validator=self._validate, clock=clock)
+                                  validator=self._validate,
+                                  admission=admission, clock=clock)
+        self._injector = injector
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.wave_timeout_s = wave_timeout_s
+        if adaptive and mode != "pipelined":
+            raise ValueError("adaptive pipelining tunes inflight_depth — "
+                             "it requires mode='pipelined'")
+        if isinstance(adaptive, AdaptiveController):
+            self.controller = adaptive
+        elif adaptive:
+            self.controller = AdaptiveController(
+                depth=inflight_depth,
+                max_depth=max(AdaptiveController.max_depth, inflight_depth),
+                wave_voxels=max_wave_voxels,
+                max_wave_voxels=(max_wave_voxels * 4 if max_wave_voxels
+                                 else AdaptiveController.max_wave_voxels))
+        else:
+            self.controller = None
         self._depth = 1 if mode == "sync" else int(inflight_depth)
         self._inflight: collections.deque = collections.deque()
+        self._wave_seq = 0  # engine dispatch counter = fault-schedule index
         # aggregate stats of waves poll() retired (or that died at
         # dispatch) since the last drain — folded into the next drain's
         # last_wave.  Stats only, never ticket references: a long-lived
         # enqueue/poll streaming server must not accumulate served
         # features/maps in the engine (the caller holds the tickets).
         self._early_stats = self._zero_stats()
+        self._shed_mark = 0    # queue.n_shed watermark at the last drain
         self._t_epoch: float | None = None  # first dispatch since last drain
         self.last_wave: dict = {}
+        # lifetime health counters (never reset by drain)
+        self.n_retries_total = 0
+        self.n_slow_waves = 0
 
     @staticmethod
     def _zero_stats() -> dict:
-        return {"n_done": 0, "voxels": 0, "n_failed": 0, "n_waves": 0}
+        return {"n_done": 0, "voxels": 0, "n_failed": 0, "n_waves": 0,
+                "n_retries": 0}
 
     def _fold_early(self, wave: list) -> None:
-        """Account a wave finalized outside drain() into the early stats."""
+        """Account a wave finalized outside drain() into the early stats.
+        Requeued (pending-again) tickets are in flight, not finalized —
+        they are counted when their retry wave lands."""
         if not wave:
             return
         self._early_stats["n_waves"] += 1
@@ -160,7 +238,7 @@ class ReconEngine:
             if t.state == RequestState.DONE:
                 self._early_stats["n_done"] += 1
                 self._early_stats["voxels"] += t.request.n_voxels
-            else:
+            elif t.state == RequestState.FAILED:
                 self._early_stats["n_failed"] += 1
 
     # -- thin views over the layers (the executor owns the network state) --
@@ -227,14 +305,19 @@ class ReconEngine:
 
     # -- streaming API -----------------------------------------------------
 
-    def enqueue(self, request: ReconRequest, *,
-                priority: int = 0) -> QueuedRequest:
+    def enqueue(self, request: ReconRequest, *, priority: int = 0,
+                deadline_ms: float | None = None) -> QueuedRequest:
         """Admit one request; returns its lifecycle ticket.
 
-        Invalid requests come back already ``failed`` (``ticket.error`` set)
-        — admission never raises and never disturbs pending requests.
+        Invalid requests come back already ``failed`` (``ticket.error``
+        set) — admission never raises and never disturbs pending requests.
+        With an admission policy installed, a valid request can instead
+        come back ``shed`` (``ticket.shed_reason`` set): overloaded, retry
+        later.  ``deadline_ms`` is this request's wait budget for
+        deadline-aware shedding (None: the policy default).
         """
-        return self.queue.submit(request, priority=priority)
+        return self.queue.submit(request, priority=priority,
+                                 deadline_ms=deadline_ms)
 
     def poll(self) -> int:
         """Dispatch every wave the formation policy says is due; no blocking
@@ -281,6 +364,8 @@ class ReconEngine:
         self._early_stats = self._zero_stats()
         wall = self._clock() - t0
         self._t_epoch = None
+        n_shed = self.queue.n_shed - self._shed_mark
+        self._shed_mark = self.queue.n_shed
         served = [t for t in retired if t.state == RequestState.DONE]
         total = sum(t.request.n_voxels for t in served) + early["voxels"]
         n_req = len(served) + early["n_done"]
@@ -290,8 +375,30 @@ class ReconEngine:
                           "n_waves": n_waves + early["n_waves"],
                           "mode": self.mode,
                           "n_failed": (len(retired) - len(served)
-                                       + early["n_failed"])}
+                                       + early["n_failed"]),
+                          "n_shed": n_shed,
+                          "n_retries": early["n_retries"],
+                          "degraded": self.executor.degraded}
         return [t.result for t in served]
+
+    def health(self) -> dict:
+        """Live robustness snapshot: degradation, failures, retries,
+        shedding, stalls, and the current (possibly adaptive) knobs."""
+        ex = self.executor
+        return {"degraded": ex.degraded,
+                "degraded_reason": ex.degraded_reason,
+                "int8_impl": ex.int8_impl,
+                "n_kernel_failures": ex.n_kernel_failures,
+                "n_degraded_waves": ex.n_degraded_waves,
+                "n_retries_total": self.n_retries_total,
+                "n_slow_waves": self.n_slow_waves,
+                "n_shed_total": self.queue.n_shed,
+                "n_rejected_total": self.queue.n_rejected,
+                "inflight_depth": self._depth,
+                "max_wave_voxels": self.queue.max_wave_voxels,
+                "service_rate_voxels_per_s": (
+                    self.admission.service_rate
+                    if self.admission is not None else None)}
 
     # -- compatibility wrapper --------------------------------------------
 
@@ -319,10 +426,11 @@ class ReconEngine:
         # validated above, all-or-nothing: skip submit's re-validation
         tickets = [self.queue.submit(r, validate=False) for r in requests]
         self.drain()
-        failed = [t for t in tickets if t.state == RequestState.FAILED]
+        failed = [t for t in tickets if t.state in (RequestState.FAILED,
+                                                    RequestState.SHED)]
         if failed:
-            # each ticket's error names the failing stage (dispatch /
-            # execution / assembly); don't relabel it here
+            # each ticket's error names the failing stage (admission shed /
+            # dispatch / execution / assembly); don't relabel it here
             raise ValueError(
                 f"{len(failed)} request(s) failed while serving the wave: "
                 + "; ".join(t.error for t in failed[:3]))
@@ -330,42 +438,92 @@ class ReconEngine:
 
     # -- wave mechanics ----------------------------------------------------
 
+    def _wave_failed(self, wave: list, stage: str, exc: Exception) -> int:
+        """Bounded-retry failure policy for a crashed wave; returns how
+        many tickets it marked failed (the caller owns the accounting —
+        execution failures return their tickets to drain, dispatch
+        failures never enter flight and count into the early stats).
+
+        Every still-scheduled ticket with retry budget left goes back to
+        the queue as a *solo* ticket (its retry wave carries no mates, so
+        a poisoned request can only take itself down on the next attempt);
+        tickets out of budget fail with the error recorded.  This is the
+        fix for the whole-wave blast radius: one crashing dispatch used to
+        fail every wave-mate outright.
+        """
+        retried = failed = 0
+        for t in wave:
+            if t.state != RequestState.SCHEDULED:
+                continue  # sync mode may have assembled some already
+            if t.retries < self.max_retries:
+                t.retries += 1
+                t.solo = True
+                self.queue.requeue(t)
+                retried += 1
+            else:
+                t.state = RequestState.FAILED
+                t.error = (f"wave {stage} failed"
+                           f"{' after retry' if t.retries else ''}: "
+                           f"{type(exc).__name__}: {exc}")
+                failed += 1
+        if retried:
+            self._early_stats["n_retries"] += retried
+            self.n_retries_total += retried
+            if self.retry_backoff_s > 0:
+                # exponential backoff before the retry waves can dispatch:
+                # a crashing backend gets breathing room, bounded by
+                # max_retries doublings
+                worst = max(t.retries for t in wave
+                            if t.state == RequestState.PENDING)
+                time.sleep(self.retry_backoff_s * 2 ** (worst - 1))
+        return failed
+
     def _dispatch(self, wave: list) -> bool:
         """Stage + enqueue one wave; True iff it actually entered flight."""
         if not wave:
             return False
+        widx = self._wave_seq
+        self._wave_seq += 1
         t_start = self._clock()
         try:
+            if self._injector is not None:
+                self._injector.fire_dispatch(
+                    widx, [t.request.request_id for t in wave])
             handle = self.executor.dispatch(
-                [t.request.features for t in wave])
+                [t.request.features for t in wave], wave_index=widx)
         except Exception as e:
             # an executor failure must stay a lifecycle state too: a wave
-            # that cannot stage marks its tickets failed instead of raising
-            # out of poll()/drain() and stranding them as "scheduled"
-            for t in wave:
-                t.state = RequestState.FAILED
-                t.error = f"wave dispatch failed: {type(e).__name__}: {e}"
-            # failures only — a wave that never entered flight is not
-            # counted in n_waves
-            self._early_stats["n_failed"] += len(wave)
+            # that cannot stage requeues/fails its tickets instead of
+            # raising out of poll()/drain() and stranding them as
+            # "scheduled".  Not counted in n_waves — it never entered
+            # flight — so its failures count here (they belong to no
+            # retired wave that drain could account).
+            self._early_stats["n_failed"] += self._wave_failed(
+                wave, "dispatch", e)
             return False
         if self._t_epoch is None:
             # session clock starts at the first wave that actually entered
             # flight; a wave dying at dispatch must not skew wall_s
             self._t_epoch = t_start
-        self._inflight.append((wave, handle))
+        staging_s = self._clock() - t_start
+        self._inflight.append((wave, handle, widx, staging_s))
         return True
 
     def _retire_oldest(self) -> list:
-        """Complete the oldest in-flight wave and assemble its requests.
+        """Complete the oldest in-flight wave and assemble its requests;
+        returns the wave's *finalized* tickets (requeued ones are pending
+        again and excluded).
 
         Sync mode syncs tile-by-tile so each request is assembled the
         moment its last tile lands; pipelined mode blocks once for the
-        whole wave (``InflightWave.wait``) and assembles everything.
+        whole wave (``InflightWave.wait``) and assembles everything.  The
+        wait is watchdogged (``wave_timeout_s``) and its measured staging/
+        compute split feeds the admission service-rate estimate and the
+        adaptive controller.
         """
         if not self._inflight:
             return []
-        wave, handle = self._inflight.popleft()
+        wave, handle, widx, staging_s = self._inflight.popleft()
         counts = [t.request.n_voxels for t in wave]
         ends = np.cumsum(counts) if counts else np.zeros(0, np.int64)
         pred_ms = None
@@ -376,13 +534,20 @@ class ReconEngine:
             now = self._clock()
             while done < len(wave) and ends[done] <= covered:
                 end = int(ends[done])
-                self._finish(wave[done], pred_ms[end - counts[done]:end], now)
+                self._finish(wave[done], pred_ms[end - counts[done]:end],
+                             now, widx)
                 done += 1
 
         # tiles come back already denormalized (ms): the rescale lives
         # inside the executor's jitted forward, so retirement adds no
         # device round-trip after the executor's single sync
+        t_wait = self._clock()
+        stall_s = 0.0
         try:
+            if self._injector is not None:
+                spec = self._injector.fire_wait(widx)  # raises WaveTimeout
+                if spec is not None:  # slow_wave: a synthetic stall
+                    stall_s = spec.delay_s
             if self.mode == "sync":
                 pred_ms = np.empty((handle.total, 2), np.float32)
                 covered = 0
@@ -395,17 +560,37 @@ class ReconEngine:
             assemble_upto(handle.total)  # remainder incl. zero-voxel requests
         except Exception as e:
             # device-side execution failures are lifecycle states too: the
-            # wave was already popped, so strand nothing in "scheduled"
-            for t in wave:
-                if t.state == RequestState.SCHEDULED:
-                    t.state = RequestState.FAILED
-                    t.error = (f"wave execution failed: "
-                               f"{type(e).__name__}: {e}")
+            # wave was already popped, so strand nothing in "scheduled" —
+            # retry-budgeted tickets requeue solo, the rest fail
+            if not isinstance(e, WaveTimeout):
+                # async kernel failures surface here; feed the circuit
+                # breaker so retries (and later waves) serve degraded
+                self.executor.note_kernel_failure()
+            self._wave_failed(wave, "execution", e)
+            return [t for t in wave
+                    if t.state in (RequestState.DONE, RequestState.FAILED)]
+        compute_s = self._clock() - t_wait + stall_s
+        stalled = stall_s > 0 or (self.wave_timeout_s is not None
+                                  and compute_s > self.wave_timeout_s)
+        if stalled:
+            self.n_slow_waves += 1
+        if self.admission is not None:
+            self.admission.observe_service(handle.total, compute_s)
+        if self.controller is not None:
+            depth, cap = self.controller.observe(
+                staging_s=staging_s, compute_s=compute_s,
+                n_voxels=handle.total, stalled=stalled)
+            self._depth = depth
+            if cap is not None:
+                self.queue.max_wave_voxels = cap
         return wave
 
     def _finish(self, ticket: QueuedRequest, pred_ms_slice: np.ndarray,
-                now: float) -> None:
+                now: float, wave_index: int = -1) -> None:
         try:
+            if self._injector is not None:
+                self._injector.fire_assemble(wave_index,
+                                             ticket.request.request_id)
             ticket.result = self._assemble(ticket.request, pred_ms_slice,
                                            now - ticket.enqueue_t)
         except Exception as e:  # surface as lifecycle state, not out of wave

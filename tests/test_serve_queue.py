@@ -375,7 +375,7 @@ def test_dispatch_failure_fails_the_wave_not_the_drain(monkeypatch):
     params, _, _ = _calibrated_net()
     engine = ReconEngine(backend="float", params=params)
     monkeypatch.setattr(engine.executor, "dispatch",
-                        lambda feats: (_ for _ in ()).throw(
+                        lambda feats, **kw: (_ for _ in ()).throw(
                             RuntimeError("synthetic stage failure")))
     t1 = engine.enqueue(ReconRequest(features=_features(10, 1)))
     t2 = engine.enqueue(ReconRequest(features=_features(20, 2)))
